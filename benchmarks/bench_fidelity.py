@@ -1,0 +1,160 @@
+"""Paper §IV-G1: fidelity of the closed-form energy objective.
+
+Reproduces the paper's evaluation design: the seven distinct matrix-multiply
+operators of Llama-3.2-1B prefill at 1k context, mapped on the Eyeriss-like
+template; per GEMM, 1152 "tiling - permutation (walking axis) - bypass"
+combinations = 8064 mapping configurations total.  For each configuration
+the total energy is computed with (a) GOMA's closed form and (b) the
+loop-nest reference model (timeloop-model stand-in), under the same ERT and
+mapping semantics.  Paper's numbers: 99.26% exact, mean rel-err 0.099%,
+p50/p95/p99 = 0, energy-weighted overall err 0.066%.
+
+A second section cross-checks both analytical models against the literal
+event-driven simulator on tiny GEMMs (ground truth; exactness predicate).
+"""
+from __future__ import annotations
+
+import random
+
+from common import Timer, emit, geomean, write_csv  # noqa: E402
+
+from repro.core import (TEMPLATES, Gemm, Mapping, analytical_energy,
+                        closed_form_is_exact, reference_energy,
+                        simulate_counts, analytical_counts)
+from repro.core.geometry import AXES, canonical_walk, divisor_chains
+from repro.core.workloads import LLAMA32_1B, prefill_gemms
+
+
+def _tilings(rng: random.Random, gemm: Gemm, n: int, hw) -> list[tuple]:
+    """n deterministic pseudo-random *hardware-valid* tilings.
+
+    Like the paper's evaluation set, tilings must be realizable on the
+    target accelerator (capacity with full residency — the strictest, so
+    every bypass subset of the cross product stays feasible — and spatial
+    fanout within the PE budget).  Uniform unconstrained chains would be
+    dominated by degenerate trip-1 stages that no valid mapping exhibits.
+    """
+    out: list[tuple] = []
+    tries = 0
+    while len(out) < n and tries < 20000:
+        tries += 1
+        t = tuple(rng.choice(divisor_chains(gemm.dim(a))) for a in AXES)
+        l1 = [c[0] for c in t]
+        l3 = [c[2] for c in t]
+        sp = [c[1] // c[2] for c in t]
+        if sp[0] * sp[1] * sp[2] > hw.num_pe:
+            continue
+        if l1[0] * l1[2] + l1[1] * l1[2] + l1[0] * l1[1] > hw.sram_words:
+            continue
+        if l3[0] * l3[2] + l3[1] * l3[2] + l3[0] * l3[1] > hw.rf_words:
+            continue
+        out.append(t)
+    return out
+
+
+def run(full: bool = True) -> dict:
+    hw = TEMPLATES["eyeriss-like"]
+    rng = random.Random(2026)
+    # seven DISTINCT operator shapes (attn_score/context share dims with
+    # transposed roles; both kept -> 8 types, 7 distinct like the paper)
+    gemms = [g for _, g, _ in prefill_gemms(LLAMA32_1B, 1024)]
+    seen, distinct = set(), []
+    for g in gemms:
+        if g.dims not in seen:
+            seen.add(g.dims)
+            distinct.append(g)
+    n_tilings = 16 if full else 4
+    res3_opts = [(True, True, True), (True, True, False),
+                 (True, False, True), (False, True, True),
+                 (True, False, False), (False, True, False),
+                 (False, False, True), (False, False, False)]
+
+    rows = []
+    rel_errs = []
+    abs_err_sum = 0.0
+    ref_sum = 0.0
+    exact = 0
+    with Timer() as t:
+        for gemm in distinct:
+            for tiling in _tilings(rng, gemm, n_tilings, hw):
+                for a01 in AXES:
+                    for a12 in AXES:
+                        for res3 in res3_opts:
+                            m = Mapping(
+                                L1=tuple(c[0] for c in tiling),
+                                L2=tuple(c[1] for c in tiling),
+                                L3=tuple(c[2] for c in tiling),
+                                alpha01=a01, alpha12=a12,
+                                res1=(True, True, True), res3=res3)
+                            # timeloop semantics: unit loops are not loops,
+                            # so walking-axis aliases fold (geometry.py)
+                            m = canonical_walk(gemm, m)
+                            e_goma = analytical_energy(gemm, m, hw).total
+                            e_ref = reference_energy(gemm, m, hw)
+                            err = abs(e_goma - e_ref) / e_ref
+                            rel_errs.append(err)
+                            abs_err_sum += abs(e_goma - e_ref)
+                            ref_sum += e_ref
+                            if err <= 1e-12:
+                                exact += 1
+                            rows.append([gemm.name, gemm.dims, m.L1, m.L2,
+                                         m.L3, a01, a12, res3, e_goma,
+                                         e_ref, err])
+    n = len(rel_errs)
+    rel_sorted = sorted(rel_errs)
+    stats = {
+        "configs": n,
+        "exact_pct": 100.0 * exact / n,
+        "mean_rel_err_pct": 100.0 * sum(rel_errs) / n,
+        "p50_pct": 100.0 * rel_sorted[n // 2],
+        "p95_pct": 100.0 * rel_sorted[int(n * 0.95)],
+        "p99_pct": 100.0 * rel_sorted[int(n * 0.99)],
+        "energy_weighted_err_pct": 100.0 * abs_err_sum / ref_sum,
+        "paper_exact_pct": 99.26,
+        "paper_mean_rel_err_pct": 0.099,
+        "paper_energy_weighted_err_pct": 0.066,
+    }
+    write_csv("fidelity", ["gemm", "dims", "L1", "L2", "L3", "a01", "a12",
+                           "res3", "e_goma", "e_ref", "rel_err"], rows)
+
+    # --- ground-truth section: tiny GEMMs vs literal simulator ------------
+    sim_checked = sim_exact = pred_exact_ok = pred_flagged = 0
+    rng2 = random.Random(7)
+    for dims in [(8, 8, 8), (12, 6, 8), (16, 8, 4), (6, 6, 6)]:
+        gemm = Gemm(*dims)
+        for _ in range(40):
+            tiling = tuple(rng2.choice(divisor_chains(gemm.dim(a)))
+                           for a in AXES)
+            m = Mapping(L1=tuple(c[0] for c in tiling),
+                        L2=tuple(c[1] for c in tiling),
+                        L3=tuple(c[2] for c in tiling),
+                        alpha01=rng2.choice(AXES), alpha12=rng2.choice(AXES),
+                        res1=tuple(rng2.random() < 0.8 for _ in range(3)),
+                        res3=tuple(rng2.random() < 0.8 for _ in range(3)))
+            sim = simulate_counts(gemm, m)
+            cf = analytical_counts(gemm, m)
+            sim_checked += 1
+            same = cf.isclose(sim)
+            if same:
+                sim_exact += 1
+            if closed_form_is_exact(gemm, m):
+                pred_exact_ok += int(same)
+                pred_flagged += 1
+    stats["sim_checked"] = sim_checked
+    stats["sim_exact"] = sim_exact
+    stats["sim_pred_exact_conflicts"] = pred_flagged - pred_exact_ok
+
+    emit("fidelity_sweep", t.dt * 1e6 / max(n, 1),
+         f"exact={stats['exact_pct']:.2f}%/paper99.26% "
+         f"mean_err={stats['mean_rel_err_pct']:.4f}%/paper0.099% "
+         f"ew_err={stats['energy_weighted_err_pct']:.4f}%/paper0.066% "
+         f"n={n}")
+    emit("fidelity_sim_oracle", 0.0,
+         f"sim_exact={sim_exact}/{sim_checked} "
+         f"pred_conflicts={stats['sim_pred_exact_conflicts']}")
+    return stats
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,50 @@
+"""Paper Fig. 7: per-layer (per-GEMM) normalized EDP breakdown.
+
+Two representative cases: Gemmini-like + LLaMA-3.2-1B (1k) — small edge —
+and A100-like + LLaMA-3.3-70B (128k) — ultra-large center.  Expected
+qualitative structure (paper §V-B2): lm_head (matrix-vector) is easy for
+every mapper; matrix-matrix GEMMs are the main gap source and the gap
+amplifies with scale.
+"""
+from __future__ import annotations
+
+from common import emit, write_csv
+
+from repro.core import TEMPLATES
+from repro.core.mappers import ALL_MAPPERS
+from repro.core.workloads import LLAMA32_1B, LLAMA33_70B, prefill_gemms
+
+CASES = [
+    ("gemmini-like+llama-3.2-1b(1k)", LLAMA32_1B, 1024, "gemmini-like"),
+    ("a100-like+llama-3.3-70b(128k)", LLAMA33_70B, 131072, "a100-like"),
+]
+MAPPERS = ("goma", "cosa", "factorflow", "loma", "salsa", "timeloop-hybrid")
+
+
+def run(mappers=MAPPERS, seed: int = 0) -> dict:
+    rows = []
+    out = {}
+    for case_name, spec, seq, hw_name in CASES:
+        hw = TEMPLATES[hw_name]
+        per_layer: dict[str, dict[str, float]] = {}
+        for gtype, gemm, w in prefill_gemms(spec, seq):
+            per_layer[gtype] = {}
+            for mp_name in mappers:
+                r = ALL_MAPPERS[mp_name](seed=seed).map(gemm, hw)
+                per_layer[gtype][mp_name] = (r.report.edp if r.report
+                                             else float("inf"))
+        out[case_name] = per_layer
+        for gtype, per in per_layer.items():
+            base = per["goma"]
+            rows.append([case_name, gtype] +
+                        [per[m] / base for m in mappers])
+            worst = max(per[m] / base for m in mappers)
+            emit(f"perlayer[{case_name}][{gtype}]", 0.0,
+                 " ".join(f"{m}={per[m] / base:.2f}x" for m in mappers)
+                 + f" worst={worst:.2f}x")
+    write_csv("perlayer", ["case", "gemm"] + list(mappers), rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""EXPERIMENTS.md §Roofline: the three-term table over all dry-run cells.
+
+Terms are recomputed from the RAW numbers stored by launch/dryrun.py
+(per-device HLO flops/bytes from cost_analysis, per-chip collective bytes
+from the HLO parse), so the table always reflects the current roofline
+semantics even for cells compiled earlier.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from common import ROOT, emit, write_csv
+
+import sys
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.launch.roofline import Roofline  # noqa: E402
+
+DRYRUN_DIR = ROOT / "benchmarks" / "results" / "dryrun"
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        ha = rec.get("hlo_analysis") or {
+            "flops": rec["cost"].get("flops", 0.0),
+            "bytes": rec["cost"].get("bytes accessed", 0.0)}
+        rl = Roofline(
+            flops=ha["flops"], hbm_bytes=ha["bytes"],
+            link_bytes=rec["collectives"]["link_bytes"],
+            chips=rec["chips"],
+            model_flops=rec["roofline"]["model_flops"])
+        rec["roofline"] = rl.as_dict()
+        cells.append(rec)
+    return cells
+
+
+def run() -> list[dict]:
+    cells = load_cells()
+    rows = []
+    for rec in cells:
+        r = rec["roofline"]
+        rows.append([
+            rec["arch"], rec["shape"], rec["mesh"], rec["sharding"],
+            rec["chips"],
+            f"{r['t_compute_s']:.3e}", f"{r['t_memory_s']:.3e}",
+            f"{r['t_collective_s']:.3e}", r["bottleneck"],
+            f"{r['roofline_fraction']:.4f}",
+            f"{r['flops_efficiency']:.3f}",
+            rec.get("compile_s", ""),
+        ])
+    rows.sort()
+    write_csv("roofline_table",
+              ["arch", "shape", "mesh", "sharding", "chips",
+               "t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+               "roofline_fraction", "flops_efficiency", "compile_s"],
+              rows)
+    ok = [r for r in cells if r["mesh"] == "pod256"]
+    worst = sorted(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    best = worst[::-1]
+    emit("roofline_cells", 0.0,
+         f"{len(cells)} ok cells ({len(ok)} single-pod)")
+    if ok:
+        emit("roofline_best", 0.0,
+             f"{best[0]['cell']} frac={best[0]['roofline']['roofline_fraction']:.3f}")
+        emit("roofline_worst", 0.0,
+             f"{worst[0]['cell']} frac={worst[0]['roofline']['roofline_fraction']:.3f}")
+        coll = [r for r in ok
+                if r["roofline"]["bottleneck"] == "collective"]
+        emit("roofline_collective_bound", 0.0,
+             f"{len(coll)}/{len(ok)} single-pod cells collective-bound")
+    return cells
+
+
+if __name__ == "__main__":
+    for rec in run():
+        r = rec["roofline"]
+        print(f"{rec['cell']:55s} {r['bottleneck']:10s} "
+              f"frac={r['roofline_fraction']:.4f} "
+              f"tc={r['t_compute_s']:.2e} tm={r['t_memory_s']:.2e} "
+              f"tx={r['t_collective_s']:.2e} eff={r['flops_efficiency']:.2f}")

@@ -1,0 +1,43 @@
+"""Paper Fig. 9 / §V-C2: solve-time scaling with workload size.
+
+GOMA's decision-variable dimension depends on the (fixed) hierarchy depth,
+only weakly on the numeric X/Y/Z scales; its time-to-solution should stay
+flat as sequence length grows 1k -> 128k, while search baselines grow.
+Runs the mlp_gate_up GEMM of Qwen3-32B on A100-like across sequence
+lengths, for GOMA and the two structurally closest baselines.
+"""
+from __future__ import annotations
+
+from common import emit, write_csv
+
+from repro.core import TEMPLATES, Gemm
+from repro.core.mappers import ALL_MAPPERS
+from repro.core.workloads import QWEN3_32B
+
+SEQS = (1024, 4096, 16384, 65536, 131072)
+MAPPERS = ("goma", "cosa", "loma", "salsa")
+
+
+def run(mappers=MAPPERS, seqs=SEQS, seed: int = 0) -> dict:
+    hw = TEMPLATES["a100-like"]
+    spec = QWEN3_32B
+    rows = []
+    out: dict[str, list[float]] = {m: [] for m in mappers}
+    for seq in seqs:
+        gemm = Gemm(seq, spec.d_ff, spec.d_model, f"mlp_gate_up_{seq}")
+        for mp_name in mappers:
+            r = ALL_MAPPERS[mp_name](seed=seed).map(gemm, hw)
+            out[mp_name].append(r.runtime_s)
+            rows.append([seq, mp_name, r.runtime_s, r.edp, r.evals])
+    write_csv("solver_scaling", ["seq", "mapper", "runtime_s", "edp",
+                                 "evals"], rows)
+    for m in mappers:
+        ts = out[m]
+        growth = ts[-1] / ts[0] if ts[0] > 0 else float("inf")
+        emit(f"scaling[{m}]", ts[-1] * 1e6,
+             f"t(1k)={ts[0]:.3f}s t(128k)={ts[-1]:.3f}s growth={growth:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import csv
+import json
+import math
+import os
+import pathlib
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+RESULTS_DIR = ROOT / "benchmarks" / "results"
+RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> pathlib.Path:
+    path = RESULTS_DIR / f"{name}.csv"
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def write_json(name: str, obj) -> pathlib.Path:
+    path = RESULTS_DIR / f"{name}.json"
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+    return path
+
+
+def geomean(xs) -> float:
+    xs = [x for x in xs if x > 0 and math.isfinite(x)]
+    if not xs:
+        return float("nan")
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def median(xs) -> float:
+    xs = sorted(x for x in xs if math.isfinite(x))
+    if not xs:
+        return float("nan")
+    n = len(xs)
+    return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness-level CSV line contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,96 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (via common.emit).
+
+    PYTHONPATH=src python -m benchmarks.run            # reduced (fast)
+    PYTHONPATH=src python -m benchmarks.run --full     # full 24-case sweep
+
+Suites:
+  fidelity   paper §IV-G1  closed-form vs reference consistency
+  edp        paper Table II / Fig 6   EDP vs 5 baselines
+  runtime    paper Table III / Fig 8  time-to-solution
+  perlayer   paper Fig 7   per-GEMM breakdown (2 cases)
+  scaling    paper Fig 9   solve-time scaling with seq length
+  dataflow   beyond-paper: taxonomy of GOMA's optimal mappings
+  kernels    Pallas goma_gemm vs jnp oracle (interpret mode)
+  roofline   dry-run-derived roofline terms (EXPERIMENTS.md §Roofline)
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import traceback
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from common import emit  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full paper-scale sweeps (slow)")
+    ap.add_argument("--suites", type=str, default="",
+                    help="comma-separated subset of suites")
+    args = ap.parse_args()
+    want = set(args.suites.split(",")) if args.suites else None
+
+    def on(name: str) -> bool:
+        return want is None or name in want
+
+    failures = []
+
+    def guarded(name, fn):
+        print(f"=== suite: {name} ===", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the harness going
+            failures.append((name, e))
+            traceback.print_exc()
+            emit(f"{name}_FAILED", 0.0, repr(e))
+
+    if on("fidelity"):
+        import bench_fidelity
+        guarded("fidelity", lambda: bench_fidelity.run(full=args.full))
+    if on("edp"):
+        import bench_edp
+        guarded("edp", lambda: bench_edp.run(
+            cases_limit=None if args.full else 6, verbose=args.full))
+    if on("runtime"):
+        import bench_runtime
+        guarded("runtime", bench_runtime.run)
+    if on("perlayer"):
+        import bench_perlayer
+        guarded("perlayer", bench_perlayer.run)
+    if on("scaling"):
+        import bench_solver_scaling
+        guarded("scaling", bench_solver_scaling.run)
+    if on("dataflow"):
+        import bench_dataflow
+        guarded("dataflow", bench_dataflow.run)
+    if on("kernels"):
+        try:
+            import bench_kernels
+        except ImportError:
+            bench_kernels = None
+        if bench_kernels is not None:
+            guarded("kernels", bench_kernels.run)
+    if on("roofline"):
+        try:
+            import bench_roofline
+        except ImportError:
+            bench_roofline = None
+        if bench_roofline is not None:
+            guarded("roofline", bench_roofline.run)
+
+    if failures:
+        print(f"{len(failures)} suite(s) failed: "
+              f"{[n for n, _ in failures]}", file=sys.stderr)
+        sys.exit(1)
+    print("all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

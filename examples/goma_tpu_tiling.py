@@ -1,0 +1,44 @@
+"""GOMA as a TPU kernel planner: solve the paper's optimization problem on
+the HBM->VMEM->MXU hierarchy and run the resulting Pallas kernel.
+
+    PYTHONPATH=src python examples/goma_tpu_tiling.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tpu_mapping import plan_gemm_tiling
+from repro.kernels.ops import gemm
+from repro.kernels.ref import matmul_ref
+
+
+def main():
+    shapes = [(4096, 4096, 4096), (1024, 14336, 4096), (8192, 1024, 8192)]
+    for (M, N, K) in shapes:
+        plan = plan_gemm_tiling(M, N, K, dtype_bytes=4)
+        bm, bn, bk = plan.block
+        vmem_mb = (bm * bk + bk * bn + bm * bn) * 4 / 2 ** 20
+        print(f"GEMM {M}x{N}x{K}:")
+        print(f"  GOMA plan: block=(bm={bm}, bn={bn}, bk={bk}) "
+              f"grid={plan.grid} order={plan.grid_order} "
+              f"walk-axis={plan.walk}")
+        print(f"  VMEM working set {vmem_mb:.1f} MiB, modeled "
+              f"{plan.objective:.4f} pJ/MAC, solve {plan.solve_time_s:.2f}s")
+        a = jax.random.normal(jax.random.PRNGKey(0), (M, K),
+                              jnp.float32) * 0.05
+        b = jax.random.normal(jax.random.PRNGKey(1), (K, N),
+                              jnp.float32) * 0.05
+        out = gemm(a, b)           # interpret mode on CPU, compiled on TPU
+        ref = matmul_ref(a, b)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        print(f"  kernel vs oracle max err: {err:.2e}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Dev harness: fuzz closed-form vs reference vs literal simulator."""
+import itertools
+import random
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.energy import analytical_counts, closed_form_is_exact
+from repro.core.geometry import AXES, Gemm, Mapping, divisor_chains
+from repro.core.sim_oracle import simulate_counts
+from repro.core.timeloop_ref import reference_counts
+
+
+def rand_mapping(rng, gemm, force_nondegenerate=False):
+    while True:
+        chains = [rng.choice(divisor_chains(d)) for d in gemm.dims]
+        m = Mapping(
+            L1=tuple(c[0] for c in chains),
+            L2=tuple(c[1] for c in chains),
+            L3=tuple(c[2] for c in chains),
+            alpha01=rng.choice(AXES), alpha12=rng.choice(AXES),
+            res1=tuple(rng.random() < 0.8 for _ in range(3)),
+            res3=tuple(rng.random() < 0.8 for _ in range(3)),
+        )
+        if not force_nondegenerate or closed_form_is_exact(gemm, m):
+            return m
+
+
+def diff(a, b):
+    da, db = a.as_dict(), b.as_dict()
+    return {k: (da[k], db[k]) for k in da
+            if abs(da[k] - db[k]) > 1e-6 * max(1.0, da[k], db[k])}
+
+
+def main():
+    rng = random.Random(0)
+    gemms = [Gemm(4, 4, 4), Gemm(8, 4, 6), Gemm(12, 6, 8), Gemm(6, 6, 6),
+             Gemm(16, 8, 4), Gemm(9, 6, 12), Gemm(8, 8, 8), Gemm(5, 7, 3)]
+    n_ref_sim = n_cf_ref_noreuse = n_cf_sim_exactpred = 0
+    fail = 0
+    trials = 0
+    exact_flags = 0
+    for gemm in gemms:
+        for _ in range(150):
+            m = rand_mapping(rng, gemm)
+            trials += 1
+            sim = simulate_counts(gemm, m)
+            ref = reference_counts(gemm, m, full_reuse=True)
+            cf = analytical_counts(gemm, m)
+            ref_ncf = reference_counts(gemm, m, full_reuse=False)
+            # 1) full-reuse reference must equal literal simulation ALWAYS
+            d1 = diff(ref, sim)
+            if d1:
+                n_ref_sim += 1
+                if n_ref_sim <= 3:
+                    print("REF!=SIM", gemm.dims, m, d1)
+            # 2) closed form must equal no-reuse reference ALWAYS
+            d2 = diff(cf, ref_ncf)
+            if d2:
+                n_cf_ref_noreuse += 1
+                if n_cf_ref_noreuse <= 3:
+                    print("CF!=REF(noreuse)", gemm.dims, m, d2)
+            # 3) when predicate says exact, closed form == sim
+            if closed_form_is_exact(gemm, m):
+                exact_flags += 1
+                d3 = diff(cf, sim)
+                if d3:
+                    n_cf_sim_exactpred += 1
+                    if n_cf_sim_exactpred <= 5:
+                        print("CF!=SIM under exact-pred", gemm.dims, m, d3)
+    print(f"trials={trials} exact_pred={exact_flags} "
+          f"ref_vs_sim_fail={n_ref_sim} cf_vs_refnoreuse_fail={n_cf_ref_noreuse} "
+          f"cf_vs_sim_exactpred_fail={n_cf_sim_exactpred}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Dev harness: solver vs brute-force enumeration on small instances."""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core.certificate import verify, verify_by_enumeration
+from repro.core.geometry import Gemm
+from repro.core.hardware import AcceleratorSpec, Ert
+from repro.core.solver import solve
+
+ERT = Ert(dram_read=200.0, dram_write=200.0, sram_read=6.0, sram_write=6.5,
+          rf_read=1.0, rf_write=1.1, macc=2.0)
+
+
+def tiny_hw(npe, sram, rf, allow_bypass=True, spatial_equality=True):
+    return AcceleratorSpec(name=f"tiny{npe}", sram_words=sram, rf_words=rf,
+                           num_pe=npe, ert=ERT, allow_bypass=allow_bypass,
+                           spatial_equality=spatial_equality)
+
+
+def main():
+    cases = [
+        (Gemm(4, 4, 4, "g444"), tiny_hw(4, 48, 6), True),
+        (Gemm(4, 4, 4, "g444le"), tiny_hw(4, 48, 6, spatial_equality=False),
+         True),
+        (Gemm(4, 6, 4, "g464"), tiny_hw(4, 64, 8), True),
+        (Gemm(8, 4, 4, "nobyp"), tiny_hw(4, 96, 6, allow_bypass=False), True),
+        (Gemm(9, 3, 3, "odd"), tiny_hw(9, 60, 9), True),
+        (Gemm(5, 7, 3, "prime-infeasible-eq"), tiny_hw(4, 64, 8), True),
+        (Gemm(8, 8, 8, "g888"), tiny_hw(4, 96, 6), False),
+        (Gemm(16, 4, 8, "g1648"), tiny_hw(8, 128, 8), False),
+    ]
+    for gemm, hw, do_enum in cases:
+        t0 = time.perf_counter()
+        res = solve(gemm, hw)
+        t = time.perf_counter() - t0
+        cert = res.certificate
+        ok_v = verify(cert, hw)
+        ok_e = verify_by_enumeration(cert, hw) if do_enum else "skip"
+        print(f"{gemm.name:22s} feas={cert.feasible} obj={cert.objective:.5g} "
+              f"mode={cert.spatial_mode}/{cert.objective_kind} "
+              f"verify={ok_v} enum={ok_e} nodes={cert.nodes_explored} "
+              f"t={t*1e3:.1f}ms")
+        assert ok_v and ok_e in (True, "skip"), f"FAILED on {gemm.name}"
+    print("all solver validations passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""GOMA core: geometric abstraction, closed-form energy model, exact solver.
+
+The paper's contribution (Yang et al., "GOMA: Geometrically Optimal Mapping
+via Analytical Modeling for Spatial Accelerators") as a composable library:
+
+    from repro.core import Gemm, TEMPLATES, solve
+    res = solve(Gemm(4096, 14336, 4096), TEMPLATES["eyeriss-like"])
+    print(res.certificate.summary())
+"""
+from .certificate import (Certificate, check_constraints, objective_value,
+                          verify, verify_by_enumeration)
+from .edp import EdpReport, delay_ns, evaluate
+from .energy import (AccessCounts, EnergyBreakdown, analytical_counts,
+                     analytical_energy, closed_form_is_exact, energy)
+from .geometry import (AXES, Gemm, Mapping, divisor_chains, divisors,
+                       enumerate_mappings, mapping_space_size)
+from .hardware import (A100_LIKE, EYERISS_LIKE, GEMMINI_LIKE, TEMPLATES,
+                       TPUV1_LIKE, TPUV5E_LIKE, AcceleratorSpec, Ert)
+from .sim_oracle import simulate_counts
+from .solver import SolveResult, solve
+from .timeloop_ref import reference_counts, reference_energy
+
+__all__ = [
+    "AXES", "A100_LIKE", "AcceleratorSpec", "AccessCounts", "Certificate",
+    "EdpReport", "EnergyBreakdown", "Ert", "EYERISS_LIKE", "GEMMINI_LIKE",
+    "Gemm", "Mapping", "SolveResult", "TEMPLATES", "TPUV1_LIKE",
+    "TPUV5E_LIKE", "analytical_counts", "analytical_energy",
+    "check_constraints", "closed_form_is_exact", "delay_ns",
+    "divisor_chains", "divisors", "energy", "enumerate_mappings",
+    "evaluate", "mapping_space_size", "objective_value", "reference_counts",
+    "reference_energy", "simulate_counts", "solve", "verify",
+    "verify_by_enumeration",
+]

@@ -1,0 +1,76 @@
+"""BEYOND-PAPER: GOMA's geometry lifted to the chip-mesh level.
+
+The paper's abstraction stops at one accelerator.  The same three-
+projection geometry applies one level up: a sharded GEMM on an N-chip
+mesh axis is a spatial tiling of the compute grid where
+
+  * sharding axis x (rows/batch)   -> B replicated, A/P sharded:
+      data parallelism; weight-gradient all-reduce over the axis,
+  * sharding axis y (cols/heads)   -> A replicated, B/P sharded:
+      tensor parallelism; activation all-gather of the x-projection,
+  * sharding axis z (reduction)    -> A/B sharded, P partial:
+      reduction parallelism; P needs a reduce-scatter — exactly GOMA's
+      reduction-axis boundary case (the "read old partial" becomes the
+      cross-chip combine).
+
+The collective bytes of each choice are the projection areas that change
+when walking the mesh axis — the paper's update-counting argument with
+ICI as the next memory level.  ``plan_shard_axis`` evaluates the three
+choices in closed form and returns the per-axis traffic, which the
+§Perf hillclimb uses to pick shardings that shrink the collective
+roofline term (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .geometry import Gemm
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardChoice:
+    axis: str                  # which GEMM axis the mesh axis walks
+    collective: str            # collective implied for the output
+    ici_bytes_per_chip: float  # ring-model bytes per chip per step
+    note: str
+
+
+def plan_shard_axis(gemm: Gemm, n_chips: int, *, dtype_bytes: int = 2,
+                    with_backward: bool = False) -> list[ShardChoice]:
+    """Rank the three mesh-walking choices by ICI traffic (ascending)."""
+    f = (n_chips - 1) / n_chips
+    words_A = gemm.Lx * gemm.Lz
+    words_B = gemm.Ly * gemm.Lz
+    words_P = gemm.Lx * gemm.Ly
+
+    out = []
+    # x-walk (DP): each chip owns Lx/n rows; B must be present everywhere
+    # (all-gather once or replicated); backward all-reduces dB.
+    fwd = words_B * f * dtype_bytes        # B broadcast/all-gather
+    bwd = 2 * words_B * f * dtype_bytes if with_backward else 0.0
+    out.append(ShardChoice("x", "all-gather(B)" +
+                           ("+all-reduce(dB)" if with_backward else ""),
+                           fwd + bwd,
+                           "data parallel: P,A sharded by rows"))
+    # y-walk (TP): A gathered, P sharded by cols; backward all-reduces dA.
+    fwd = words_A * f * dtype_bytes
+    bwd = 2 * words_A * f * dtype_bytes if with_backward else 0.0
+    out.append(ShardChoice("y", "all-gather(A)" +
+                           ("+all-reduce(dA)" if with_backward else ""),
+                           fwd + bwd,
+                           "tensor parallel: P,B sharded by cols"))
+    # z-walk (reduction parallel): inputs fully sharded, P partial:
+    # reduce-scatter(P) — GOMA's rho boundary at mesh scale.
+    fwd = words_P * f * dtype_bytes
+    bwd = 2 * words_P * f * dtype_bytes if with_backward else 0.0
+    out.append(ShardChoice("z", "reduce-scatter(P)",
+                           fwd + bwd,
+                           "reduction parallel: A,B sharded by k"))
+    out.sort(key=lambda c: c.ici_bytes_per_chip)
+    return out
+
+
+def recommend(gemm: Gemm, n_chips: int, *, dtype_bytes: int = 2,
+              with_backward: bool = False) -> ShardChoice:
+    return plan_shard_axis(gemm, n_chips, dtype_bytes=dtype_bytes,
+                           with_backward=with_backward)[0]

@@ -1,0 +1,55 @@
+"""Energy-delay product evaluation (paper §V-A4, eqs. 35–37).
+
+Following the paper, a *unified oracle* — the loop-nest reference model
+(our timeloop-model stand-in) — reports E, T and EDP for every mapper,
+GOMA included.  T is the compute lower bound V / num_pe_used cycles
+(eq. 29 ⇒ GOMA mappings reach 100% PE utilization; baselines that
+under-fill the array pay proportionally).  Leakage burns on the whole
+chip for the full duration regardless of utilization.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .energy import AccessCounts
+from .geometry import Gemm, Mapping
+from .hardware import AcceleratorSpec
+from .timeloop_ref import reference_counts
+
+
+@dataclasses.dataclass(frozen=True)
+class EdpReport:
+    energy_pj: float
+    delay_ns: float
+    edp: float            # J * s
+    num_pe_used: int
+    cycles: float
+
+    @staticmethod
+    def aggregate(parts: list[tuple["EdpReport", int]]) -> "EdpReport":
+        """Occurrence-count-weighted case aggregation (eq. 35)."""
+        e = sum(p.energy_pj * w for p, w in parts)
+        t = sum(p.delay_ns * w for p, w in parts)
+        edp = sum(p.edp * w for p, w in parts)
+        cyc = sum(p.cycles * w for p, w in parts)
+        return EdpReport(energy_pj=e, delay_ns=t, edp=edp,
+                         num_pe_used=0, cycles=cyc)
+
+
+def delay_ns(gemm: Gemm, m: Mapping, hw: AcceleratorSpec) -> float:
+    cycles = gemm.volume / m.num_pe_used
+    return cycles * hw.cycle_ns
+
+
+def evaluate(gemm: Gemm, m: Mapping, hw: AcceleratorSpec,
+             *, counts: AccessCounts | None = None) -> EdpReport:
+    """Oracle E / T / EDP for one mapping."""
+    if counts is None:
+        counts = reference_counts(gemm, m, full_reuse=True)
+    cycles = gemm.volume / m.num_pe_used
+    t_ns = cycles * hw.cycle_ns
+    leak_pj = (hw.ert.sram_leak + hw.ert.rf_leak * hw.num_pe) * cycles
+    e_pj = counts.energy(hw) + leak_pj
+    edp = (e_pj * 1e-12) * (t_ns * 1e-9)
+    return EdpReport(energy_pj=e_pj, delay_ns=t_ns, edp=edp,
+                     num_pe_used=m.num_pe_used, cycles=cycles)

@@ -1,0 +1,130 @@
+"""Accelerator templates + energy reference tables (paper §V-A2, Table I).
+
+Accelergy/Timeloop are not available offline, so the per-access energies
+below are Accelergy-style estimates (pJ per 8-bit word access, matching the
+paper's int8 W/A instantiation).  Absolute values only scale the objective;
+every algorithmic claim (optimality, fidelity closed-form vs. reference,
+relative EDP ordering) is invariant to the constants.  Sources for orders of
+magnitude: Eyeriss ISCA'16 energy table (DRAM ~200x RF), Accelergy 65/28/22nm
+library scaling, HBM2 ~4 pJ/bit vs LPDDR4 ~20 pJ/bit vs DDR3 ~40 pJ/bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Ert:
+    """Energy reference table: pJ per word access (word = 8 bit here)."""
+
+    dram_read: float
+    dram_write: float
+    sram_read: float
+    sram_write: float
+    rf_read: float
+    rf_write: float
+    macc: float
+    # per-cycle leakage (pJ/cycle) — constant wrt mapping (paper eq. 30)
+    sram_leak: float = 0.0
+    rf_leak: float = 0.0
+    # spatial-reduction adder energy; timeloop default = 0 (paper eq. 22)
+    spatial_reduce: float = 0.0
+
+    def read(self, level: int) -> float:
+        return {0: self.dram_read, 1: self.sram_read, 3: self.rf_read}[level]
+
+    def write(self, level: int) -> float:
+        return {0: self.dram_write, 1: self.sram_write, 3: self.rf_write}[level]
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorSpec:
+    """A spatial-accelerator instance of the Fig. 1 template."""
+
+    name: str
+    sram_words: int          # C^(1): global buffer capacity in words
+    rf_words: int            # C^(3): per-PE regfile capacity in words
+    num_pe: int              # spatial fanout (eq. 29 product)
+    ert: Ert
+    cycle_ns: float = 1.0    # for EDP delay term
+    # mapping-space policy knobs
+    allow_bypass: bool = True    # may the mapper search res1/res3?
+    spatial_equality: bool = True  # eq. 29 as equality (100% PE util)
+    # fixed spatial shape, e.g. TPU MXU = (128,128,1); None = free fanout
+    fixed_spatial: tuple[int, int, int] | None = None
+
+    def capacity(self, level: int) -> int:
+        return {1: self.sram_words, 3: self.rf_words}[level]
+
+
+def _kib_words(kib: float) -> int:
+    return int(kib * 1024)  # 8-bit words
+
+
+# --- the four paper templates (Table I) -----------------------------------
+
+EYERISS_LIKE = AcceleratorSpec(
+    name="eyeriss-like",
+    sram_words=_kib_words(162), rf_words=424, num_pe=256,
+    ert=Ert(dram_read=200.0, dram_write=200.0,
+            sram_read=6.1, sram_write=6.8,
+            rf_read=1.0, rf_write=1.0, macc=2.2,
+            sram_leak=2.0e-1, rf_leak=4.0e-3),
+    cycle_ns=5.0,  # 200 MHz, 65 nm
+)
+
+GEMMINI_LIKE = AcceleratorSpec(
+    name="gemmini-like",
+    sram_words=_kib_words(576), rf_words=1, num_pe=256,
+    ert=Ert(dram_read=130.0, dram_write=130.0,
+            sram_read=3.1, sram_write=3.4,
+            rf_read=0.12, rf_write=0.12, macc=0.55,
+            sram_leak=1.0e-1, rf_leak=1.0e-3),
+    cycle_ns=1.0,  # 1 GHz, 22 nm
+)
+
+A100_LIKE = AcceleratorSpec(
+    name="a100-like",
+    sram_words=_kib_words(36864), rf_words=128, num_pe=65536,
+    ert=Ert(dram_read=32.0, dram_write=32.0,     # HBM2 ~4 pJ/bit
+            sram_read=1.1, sram_write=1.2,
+            rf_read=0.06, rf_write=0.06, macc=0.12,
+            sram_leak=8.0e-1, rf_leak=2.0e-4),
+    cycle_ns=0.7,  # ~1.4 GHz, 7 nm
+)
+
+TPUV1_LIKE = AcceleratorSpec(
+    name="tpuv1-like",
+    sram_words=_kib_words(30720), rf_words=2, num_pe=65536,
+    ert=Ert(dram_read=330.0, dram_write=330.0,   # DDR3
+            sram_read=2.4, sram_write=2.6,
+            rf_read=0.10, rf_write=0.10, macc=0.38,
+            sram_leak=5.0e-1, rf_leak=5.0e-4),
+    cycle_ns=1.4,  # 700 MHz, 28 nm
+)
+
+# --- TPU-v5e-like spec used by core/tpu_mapping.py to plan Pallas tiling ---
+# HBM -> VMEM -> (MXU 128x128 systolic + accumulators).  The MXU is a
+# hard-wired x*y spatial tile: fixed_spatial pins L-hat^(2-3) = (128,128,1).
+# VMEM ~= 16 MiB/core is budgeted at 60% for mapper-managed operands (the
+# rest: semaphores, double-buffering headroom, spills).
+TPUV5E_LIKE = AcceleratorSpec(
+    name="tpuv5e-like",
+    sram_words=int(16 * 1024 * 1024 * 0.6),   # VMEM words (int8)
+    rf_words=512,                             # accumulator VREG budget / lane
+    num_pe=128 * 128,
+    ert=Ert(dram_read=18.0, dram_write=18.0,  # HBM2e-class
+            sram_read=0.9, sram_write=1.0,
+            rf_read=0.04, rf_write=0.04, macc=0.08),
+    cycle_ns=1.0 / 0.94,                      # 940 MHz
+    allow_bypass=False,        # Mosaic always stages through VMEM
+    fixed_spatial=(128, 128, 1),
+)
+
+TEMPLATES: dict[str, AcceleratorSpec] = {
+    s.name: s for s in
+    (EYERISS_LIKE, GEMMINI_LIKE, A100_LIKE, TPUV1_LIKE, TPUV5E_LIKE)
+}
+
+EDGE_TEMPLATES = ("eyeriss-like", "gemmini-like")
+CENTER_TEMPLATES = ("a100-like", "tpuv1-like")

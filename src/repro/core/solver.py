@@ -1,0 +1,324 @@
+"""GOMA exact solver: globally optimal mapping via branch-and-bound.
+
+Implements the integer optimization of paper eq. 34.  Gurobi is unavailable
+offline, so optimality is established by our own exhaustive-with-sound-
+pruning search (a *stronger* artifact: the certificate is produced by
+first-principles bounding, not a black-box solver).
+
+Structure exploited (see DESIGN.md §3):
+  * For fixed discrete choices (alpha01, alpha12, res1, res3) the objective
+    separates per axis:  Ē = Σ_d g_d(chain_d).  Per-axis energies for ALL
+    divisor chains are evaluated at once with numpy (the closed form is O(1)
+    per chain).  Only 16 variant keys (walk01?, walk12?, res1, res3) exist
+    per axis, so the 576 discrete combos share 48 precomputed arrays.
+  * Coupling across axes is only (a) the PE-count product constraint
+    (eq. 29) and (b) the two bilinear capacity constraints (eqs. 31–32).
+    We enumerate spatial fanout triples (s_x, s_y, s_z), then run DFS over
+    per-axis candidate lists sorted by energy with the admissible bound
+    g_partial + Σ min g_remaining; capacity feasibility of the last axis
+    reduces to thresholds on l1_z / l3_z.
+  * A single incumbent (UB) is shared across all combos and triples; any
+    node pruned had provable LB >= UB-at-prune-time >= final UB, so at
+    termination UB = LB and the gap is 0 (certificate).
+
+Objectives: "energy" (paper's Ē, eq. 33) or "edp" (Ē / num_pe_used, which
+orders mappings identically to EDP = E·T since T ∝ V / num_pe_used).  Under
+the paper's default equality constraint (100% PE utilization) the two
+coincide (paper §V-A4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+import numpy as np
+
+from .certificate import Certificate, check_constraints
+from .energy import analytical_energy
+from .geometry import AXES, Gemm, Mapping, divisor_chains, mapping_space_size
+from .hardware import AcceleratorSpec
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class _AxisCands:
+    """Per-axis chain candidates under one variant key."""
+
+    l1: np.ndarray
+    l2: np.ndarray
+    l3: np.ndarray
+    s: np.ndarray            # l2 // l3
+    g: np.ndarray            # normalized energy contribution per chain
+    by_s: dict[int, np.ndarray]   # s value -> candidate indices sorted by g
+    min_g_by_s: dict[int, float]
+
+
+def _axis_energy(axis: str, L0d: int, l1: np.ndarray, l2: np.ndarray,
+                 l3: np.ndarray, w01: bool, w12: bool, r1: bool, r3: bool,
+                 hw: AcceleratorSpec) -> np.ndarray:
+    """Vectorized per-axis normalized energy g_d over all chains.
+
+    Mirrors energy.analytical_energy exactly (tested for equality)."""
+    ert = hw.ert
+    l1f, l2f, l3f = l1.astype(float), l2.astype(float), l3.astype(float)
+    s = l2f / l3f
+    g = np.zeros(len(l1), dtype=float)
+    if axis in ("x", "y"):
+        d0, d1, d3 = ert.dram_read, ert.sram_read, ert.rf_read
+        u1, u3 = ert.sram_write, ert.rf_write
+        if r1:
+            g += (d0 + u1) / (float(L0d) if w01 else l1f)
+        src_down = d1 if r1 else d0
+        if r3:
+            comp = (l1f / l2f) if w12 else 1.0
+            g += (u3 + src_down / s) / (l3f * comp)
+            g += d3
+        else:
+            g += src_down / s
+    else:  # z — the reduction axis (partial sums)
+        rho1 = 0.0 if w01 else (1.0 - l1f / L0d)            # eq. 13/16
+        rho3 = (1.0 - l1f / L0d) if w12 else (1.0 - l2f / L0d)  # eq. 14/16
+        rho4 = 1.0 - s / L0d                                 # eq. 15/16
+        if r1:
+            e_down0 = ert.dram_write + rho1 * ert.dram_read
+            e_up1 = rho1 * ert.sram_write
+            g += (e_down0 + e_up1) / (float(L0d) if w01 else l1f)
+        if r1:
+            src_w, src_r = ert.sram_write, ert.sram_read
+        else:
+            src_w, src_r = ert.dram_write, ert.dram_read
+        if r3:
+            comp = (l1f / l2f) if w12 else 1.0
+            e_up3 = rho3 * ert.rf_write + ert.spatial_reduce
+            e_src = src_w + rho3 * src_r
+            g += (e_up3 + e_src / s) / (l3f * comp)
+            g += ert.rf_write + rho4 * ert.rf_read
+        else:
+            g += (src_w + rho4 * src_r) / s
+    return g
+
+
+@dataclasses.dataclass
+class SolveResult:
+    mapping: Mapping | None
+    certificate: Certificate
+    breakdown: object | None = None   # EnergyBreakdown of the optimum
+
+
+def solve(gemm: Gemm, hw: AcceleratorSpec, *,
+          objective: str = "energy",
+          spatial_mode: str | None = None,
+          allowed_walk01: tuple[str, ...] | None = None) -> SolveResult:
+    """Globally optimal mapping for (gemm, hw) with certificate.
+
+    objective: "energy" (paper default) or "edp".
+    spatial_mode: "equality" (eq. 29), "le", or None = hw default with
+    automatic fallback to "le" if equality is infeasible (recorded).
+    allowed_walk01: optionally restrict the stage 0-1 walking axis (used
+    by the TPU adapter, where a non-z outer walk with partial reduction
+    would imply partial-sum HBM traffic Pallas cannot express).
+    """
+    t0 = time.perf_counter()
+    requested_mode = spatial_mode
+    if spatial_mode is None:
+        spatial_mode = "equality" if hw.spatial_equality else "le"
+    if hw.fixed_spatial is not None:
+        spatial_mode = "fixed"
+
+    chains = {a: np.array(divisor_chains(gemm.dim(a)), dtype=np.int64)
+              for a in AXES}
+
+    # --- per-axis variant cache: (axis, w01, w12, r1, r3) -> _AxisCands ---
+    cache: dict[tuple, _AxisCands] = {}
+
+    def cands(axis: str, w01: bool, w12: bool, r1: bool, r3: bool):
+        key = (axis, w01, w12, r1, r3)
+        if key in cache:
+            return cache[key]
+        arr = chains[axis]
+        l1, l2, l3 = arr[:, 0], arr[:, 1], arr[:, 2]
+        s = l2 // l3
+        if hw.fixed_spatial is not None:
+            d = AXES.index(axis)
+            mask = s == hw.fixed_spatial[d]
+            l1, l2, l3, s = l1[mask], l2[mask], l3[mask], s[mask]
+        g = _axis_energy(axis, gemm.dim(axis), l1, l2, l3,
+                         w01, w12, r1, r3, hw)
+        by_s: dict[int, np.ndarray] = {}
+        min_g_by_s: dict[int, float] = {}
+        for sv in np.unique(s):
+            idx = np.nonzero(s == sv)[0]
+            idx = idx[np.argsort(g[idx], kind="stable")]
+            # Pareto filter (exactness-preserving): within an s-group the
+            # objective depends only on this axis's chain, and constraints
+            # are monotone nondecreasing in (l1, l3); a chain dominated in
+            # (g, l1, l3) can never be required by an optimal solution.
+            kept: list[int] = []
+            corners: list[tuple[int, int]] = []
+            for i in idx:
+                c1, c3 = int(l1[i]), int(l3[i])
+                if any(k1 <= c1 and k3 <= c3 for k1, k3 in corners):
+                    continue
+                kept.append(int(i))
+                corners.append((c1, c3))
+            idx = np.array(kept, dtype=np.int64)
+            by_s[int(sv)] = idx
+            min_g_by_s[int(sv)] = float(g[idx[0]]) if len(idx) else np.inf
+        c = _AxisCands(l1, l2, l3, s, g, by_s, min_g_by_s)
+        cache[key] = c
+        return c
+
+    # --- discrete combos --------------------------------------------------
+    bools = (True, False)
+    if hw.allow_bypass:
+        res_opts = list(itertools.product(bools, repeat=3))
+    else:
+        res_opts = [(True, True, True)]
+    walk01_opts = AXES if allowed_walk01 is None else allowed_walk01
+    combos = [(a01, a12, r1, r3)
+              for a01 in walk01_opts for a12 in AXES
+              for r1 in res_opts for r3 in res_opts]
+
+    npe = hw.num_pe
+    macc = hw.ert.macc          # eq. 28 — inside the objective: under the
+    # "edp" scale it is NOT constant.  Leakage burns on the whole chip for
+    # all V/num_pe_used cycles (eq. 30); it depends on the spatial product,
+    # so it lives inside the objective whenever num_pe_used is free.
+    leak_cycle = hw.ert.sram_leak + hw.ert.rf_leak * npe
+    best = np.inf
+    best_state: tuple | None = None
+    nodes = pruned = combos_skipped = 0
+
+    def obj_scale(s_prod: int) -> float:
+        """objective = g_sum * obj_scale(num_pe_used)."""
+        return 1.0 if objective == "energy" else 1.0 / s_prod
+
+    # Enumerate spatial triples lazily per combo (s-value sets are variant
+    # independent, but candidate g's are not).
+    for a01, a12, r1, r3 in sorted(
+            combos,
+            key=lambda c: sum(
+                float(np.min(cands(a, a == c[0], a == c[1],
+                                   c[2][i], c[3][i]).g))
+                if len(cands(a, a == c[0], a == c[1], c[2][i], c[3][i]).g)
+                else np.inf
+                for i, a in enumerate(AXES))):
+        cx = cands("x", a01 == "x", a12 == "x", r1[0], r3[0])
+        cy = cands("y", a01 == "y", a12 == "y", r1[1], r3[1])
+        cz = cands("z", a01 == "z", a12 == "z", r1[2], r3[2])
+        if not (len(cx.g) and len(cy.g) and len(cz.g)):
+            continue
+        combo_lb = (float(np.min(cx.g) + np.min(cy.g) + np.min(cz.g))
+                    + macc + leak_cycle / npe)
+        # best possible objective scale: largest feasible s product
+        max_scale = obj_scale(npe) if objective == "edp" else 1.0
+        if combo_lb * max_scale >= best - _EPS:
+            combos_skipped += 1
+            continue
+
+        # spatial triples
+        sx_vals = sorted(cx.by_s)
+        sy_vals = sorted(cy.by_s)
+        for sx in sx_vals:
+            if spatial_mode in ("equality", "fixed") and npe % sx:
+                continue
+            if sx > npe:
+                continue
+            for sy in sy_vals:
+                prod_xy = sx * sy
+                if prod_xy > npe:
+                    break
+                if spatial_mode in ("equality", "fixed"):
+                    if npe % prod_xy:
+                        continue
+                    sz_opts = [npe // prod_xy]
+                else:
+                    sz_opts = [sz for sz in cz.by_s if prod_xy * sz <= npe]
+                for sz in sz_opts:
+                    if sz not in cz.by_s:
+                        continue
+                    s_prod = prod_xy * sz
+                    scale = obj_scale(s_prod)
+                    leak_term = leak_cycle / s_prod
+                    lb_triple = (cx.min_g_by_s[sx] + cy.min_g_by_s[sy]
+                                 + cz.min_g_by_s[sz] + macc
+                                 + leak_term) * scale
+                    if lb_triple >= best - _EPS:
+                        pruned += 1
+                        continue
+                    # DFS: x then y sorted by g; z by threshold scan
+                    min_gy = cy.min_g_by_s[sy]
+                    min_gz = cz.min_g_by_s[sz]
+                    zi = cz.by_s[sz]
+                    for ix in cx.by_s[sx]:
+                        gx = cx.g[ix] + macc + leak_term
+                        if (gx + min_gy + min_gz) * scale >= best - _EPS:
+                            break
+                        l1x, l3x = int(cx.l1[ix]), int(cx.l3[ix])
+                        for iy in cy.by_s[sy]:
+                            gy = cy.g[iy]
+                            if (gx + gy + min_gz) * scale >= best - _EPS:
+                                break
+                            l1y, l3y = int(cy.l1[iy]), int(cy.l3[iy])
+                            # capacity thresholds for axis z (eqs. 31-32)
+                            rf_fix = r3[2] * l3x * l3y
+                            rf_lin = r3[1] * l3x + r3[0] * l3y
+                            sr_fix = r1[2] * l1x * l1y
+                            sr_lin = r1[1] * l1x + r1[0] * l1y
+                            if rf_fix > hw.rf_words or sr_fix > hw.sram_words:
+                                continue
+                            t_rf = ((hw.rf_words - rf_fix) // rf_lin
+                                    if rf_lin else None)
+                            t_sr = ((hw.sram_words - sr_fix) // sr_lin
+                                    if sr_lin else None)
+                            for iz in zi:
+                                nodes += 1
+                                gz = cz.g[iz]
+                                o = (gx + gy + gz) * scale
+                                if o >= best - _EPS:
+                                    break
+                                if t_rf is not None and cz.l3[iz] > t_rf:
+                                    continue
+                                if t_sr is not None and cz.l1[iz] > t_sr:
+                                    continue
+                                best = o
+                                best_state = ((a01, a12, r1, r3),
+                                              (cx, cy, cz), (ix, iy, iz))
+                                break
+
+    elapsed = time.perf_counter() - t0
+    space = mapping_space_size(gemm, search_bypass=hw.allow_bypass)
+
+    if best_state is None:
+        if spatial_mode == "equality" and requested_mode is None:
+            # eq. 29 infeasible for this (gemm, hw): documented fallback
+            return solve(gemm, hw, objective="edp", spatial_mode="le",
+                         allowed_walk01=allowed_walk01)
+        cert = Certificate(gemm=gemm, hw_name=hw.name, mapping=None,
+                           objective=np.inf, upper_bound=np.inf,
+                           lower_bound=np.inf, nodes_explored=nodes,
+                           nodes_pruned=pruned,
+                           combos_skipped=combos_skipped, space_size=space,
+                           solve_time_s=elapsed, spatial_mode=spatial_mode,
+                           feasible=False, objective_kind=objective)
+        return SolveResult(mapping=None, certificate=cert)
+
+    (a01, a12, r1, r3), (cx, cy, cz), (ix, iy, iz) = best_state
+    m = Mapping(
+        L1=(int(cx.l1[ix]), int(cy.l1[iy]), int(cz.l1[iz])),
+        L2=(int(cx.l2[ix]), int(cy.l2[iy]), int(cz.l2[iz])),
+        L3=(int(cx.l3[ix]), int(cy.l3[iy]), int(cz.l3[iz])),
+        alpha01=a01, alpha12=a12, res1=r1, res3=r3)
+    bd = analytical_energy(gemm, m, hw)
+    cert = Certificate(gemm=gemm, hw_name=hw.name, mapping=m,
+                       objective=float(best), upper_bound=float(best),
+                       lower_bound=float(best), nodes_explored=nodes,
+                       nodes_pruned=pruned, combos_skipped=combos_skipped,
+                       space_size=space, solve_time_s=elapsed,
+                       spatial_mode=spatial_mode, feasible=True,
+                       objective_kind=objective)
+    assert check_constraints(gemm, m, hw, spatial_mode=(
+        "equality" if spatial_mode == "fixed" else spatial_mode))
+    return SolveResult(mapping=m, certificate=cert, breakdown=bd)

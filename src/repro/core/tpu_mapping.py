@@ -1,0 +1,97 @@
+"""GOMA -> TPU adaptation: plan Pallas GEMM tilings with the exact solver.
+
+The TPU memory hierarchy instantiates GOMA's 5-level template (DESIGN.md
+§4): HBM≙DRAM, VMEM≙SRAM, the 128x128 MXU≙PE-array with a *hard-wired*
+spatial tile (fixed_spatial = (128,128,1)), accumulator VREGs≙regfile.
+Bypass degenerates (Mosaic always stages through VMEM) — what survives is
+tile-shape selection under the VMEM capacity constraint and walking-axis
+selection, i.e. exactly the solver's remaining degrees of freedom.
+
+Constraint added for Pallas realizability: a non-z outer walk with partial
+reduction (L1_z < K) would imply partial-sum HBM round-trips, which a
+single pallas_call cannot express (output blocks persist only across
+consecutive grid steps).  We therefore solve twice if needed: free, then
+restricted to alpha01 = z; GOMA's energy objective almost always picks the
+z-walk on its own (partial-sum DRAM traffic is the most expensive term).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from .geometry import Gemm
+from .hardware import TPUV5E_LIKE, AcceleratorSpec
+from .solver import solve
+
+MXU = 128
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuTilePlan:
+    """A GOMA-solved Pallas tiling for C[M,N] = A[M,K] @ B[K,N]."""
+
+    M: int
+    N: int
+    K: int
+    padded: tuple[int, int, int]
+    block: tuple[int, int, int]       # (bm, bn, bk) = VMEM (L1) tile
+    grid_order: tuple[str, ...]       # outer -> inner pallas grid dims
+    walk: str                         # GOMA's alpha_{0-1}
+    objective: float                  # modeled pJ / MAC
+    solve_time_s: float
+
+    @property
+    def grid(self) -> tuple[int, ...]:
+        pm, pn, pk = self.padded
+        bm, bn, bk = self.block
+        sizes = {"m": pm // bm, "n": pn // bn, "k": pk // bk}
+        return tuple(sizes[g] for g in self.grid_order)
+
+
+def tpu_spec(dtype_bytes: int = 2,
+             base: AcceleratorSpec = TPUV5E_LIKE) -> AcceleratorSpec:
+    """Rescale the v5e spec's word capacities to the compute dtype."""
+    return dataclasses.replace(
+        base,
+        name=f"{base.name}-{dtype_bytes}B",
+        sram_words=base.sram_words // dtype_bytes,
+        rf_words=base.rf_words,
+    )
+
+
+@functools.lru_cache(maxsize=512)
+def plan_gemm_tiling(M: int, N: int, K: int,
+                     *, dtype_bytes: int = 2) -> TpuTilePlan:
+    """GOMA-optimal (bm, bn, bk) + grid order for a (possibly padded) GEMM.
+
+    Dims are padded so M, N are MXU multiples and every padded dim is a
+    power-of-two-rich size (the divisor lattice of the padded dims is the
+    Pallas-legal tile set)."""
+    pm, pn = _pad_to(M, MXU), _pad_to(N, MXU)
+    pk = _pad_to(K, MXU) if K >= MXU else K
+    hw = tpu_spec(dtype_bytes)
+    gemm = Gemm(pm, pn, pk, f"tpu_{M}x{N}x{K}")
+    res = solve(gemm, hw, objective="energy")
+    m = res.mapping
+    if m is None:
+        raise ValueError(f"no feasible TPU mapping for {gemm}")
+    if m.alpha01 != "z" and m.L1[2] < pk:
+        # partial-sum HBM traffic not expressible in one pallas_call
+        res = solve(gemm, hw, objective="energy", allowed_walk01=("z",))
+        m = res.mapping
+    bm, bn, bk = m.L1
+    # pallas grid order: GOMA's walking axis is the innermost grid dim
+    axis_of = {"x": "m", "y": "n", "z": "k"}
+    inner = axis_of[m.alpha01]
+    order = [g for g in ("m", "n", "k") if g != inner] + [inner]
+    # degenerate dims drop out of the grid ordering naturally (size-1 dims
+    # stay; pallas handles trip-1 grid entries)
+    return TpuTilePlan(M=M, N=N, K=K, padded=(pm, pn, pk),
+                       block=(bm, bn, bk), grid_order=tuple(order),
+                       walk=m.alpha01,
+                       objective=res.certificate.objective,
+                       solve_time_s=res.certificate.solve_time_s)

@@ -1,0 +1,166 @@
+"""GEMM workload extraction from LLM prefill graphs (paper §V-A1).
+
+Each model's prefill phase is reduced to the paper's eight GEMM types with
+occurrence-count weights w_g (eq. 35) derived from structural parameters
+(#layers, #heads, MoE fanout).  The paper's four evaluation models are
+defined here; `arch_gemms` additionally extracts GEMM sets from this
+repo's ten assigned architectures (repro.configs) so the GOMA mapper can
+plan them too (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .geometry import Gemm
+
+GEMM_TYPES = ("attn_q_proj", "attn_kv_proj", "attn_score", "attn_context",
+              "attn_output", "mlp_gate_up", "mlp_down", "lm_head")
+
+
+@dataclasses.dataclass(frozen=True)
+class LlmSpec:
+    """Structural parameters needed to enumerate prefill GEMMs."""
+
+    name: str
+    layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # MoE (0 = dense)
+    n_experts: int = 0
+    top_k: int = 0
+    shared_experts: int = 0
+    # sliding-window layers (gemma2-style local/global alternation)
+    window: int | None = None
+    local_ratio: float = 0.0   # fraction of layers using the window
+
+
+# --- the paper's four evaluation models (public configs) -------------------
+QWEN3_0_6B = LlmSpec("qwen3-0.6b", layers=28, d_model=1024, n_heads=16,
+                     kv_heads=8, head_dim=128, d_ff=3072, vocab=151936)
+LLAMA32_1B = LlmSpec("llama-3.2-1b", layers=16, d_model=2048, n_heads=32,
+                     kv_heads=8, head_dim=64, d_ff=8192, vocab=128256)
+QWEN3_32B = LlmSpec("qwen3-32b", layers=64, d_model=5120, n_heads=64,
+                    kv_heads=8, head_dim=128, d_ff=25600, vocab=151936)
+LLAMA33_70B = LlmSpec("llama-3.3-70b", layers=80, d_model=8192, n_heads=64,
+                      kv_heads=8, head_dim=128, d_ff=28672, vocab=128256)
+
+EDGE_MODELS = (QWEN3_0_6B, LLAMA32_1B)
+CENTER_MODELS = (QWEN3_32B, LLAMA33_70B)
+EDGE_SEQ_LENS = (1024, 8192, 32768)
+CENTER_SEQ_LENS = (2048, 32768, 131072)
+
+
+def prefill_gemms(spec: LlmSpec, seq: int) -> list[tuple[str, Gemm, int]]:
+    """The eight GEMM mapping instances of one prefill, with weights.
+
+    Conventions (P(x,y) = sum_z A(x,z)B(y,z)): x = output rows, y = output
+    cols, z = reduction.  Per-head attention GEMMs are one instance each,
+    weighted by #layers x #heads.  lm_head is applied to the last token
+    only (matrix-vector, as the paper's Fig. 7 discussion notes).
+    """
+    L, H, KV, hd = spec.layers, spec.n_heads, spec.kv_heads, spec.head_dim
+    d, ff, vocab = spec.d_model, spec.d_ff, spec.vocab
+    score_len = seq
+    if spec.window is not None and spec.local_ratio >= 1.0:
+        score_len = min(seq, spec.window)
+
+    out: list[tuple[str, Gemm, int]] = [
+        ("attn_q_proj", Gemm(seq, H * hd, d, "attn_q_proj"), L),
+        ("attn_kv_proj", Gemm(seq, KV * hd, d, "attn_kv_proj"), 2 * L),
+        ("attn_score", Gemm(seq, score_len, hd, "attn_score"), L * H),
+        ("attn_context", Gemm(seq, hd, score_len, "attn_context"), L * H),
+        ("attn_output", Gemm(seq, d, H * hd, "attn_output"), L),
+    ]
+    if spec.n_experts:
+        # fine-grained MoE: per-expert token share (capacity-balanced)
+        m_exp = max(1, seq * spec.top_k // spec.n_experts)
+        n_mats = spec.n_experts + spec.shared_experts
+        out += [
+            ("mlp_gate_up", Gemm(m_exp, ff, d, "mlp_gate_up"), 2 * L * n_mats),
+            ("mlp_down", Gemm(m_exp, d, ff, "mlp_down"), L * n_mats),
+        ]
+    else:
+        out += [
+            ("mlp_gate_up", Gemm(seq, ff, d, "mlp_gate_up"), 2 * L),
+            ("mlp_down", Gemm(seq, d, ff, "mlp_down"), L),
+        ]
+    out.append(("lm_head", Gemm(1, vocab, d, "lm_head"), 1))
+    return out
+
+
+def paper_cases() -> list[tuple[str, LlmSpec, int, str]]:
+    """The 24 evaluation cases: (case_name, model, seq, hw_template)."""
+    from .hardware import CENTER_TEMPLATES, EDGE_TEMPLATES
+    cases = []
+    for spec in EDGE_MODELS:
+        for seq in EDGE_SEQ_LENS:
+            for hw in EDGE_TEMPLATES:
+                cases.append((f"{spec.name}({seq // 1024}k)@{hw}",
+                              spec, seq, hw))
+    for spec in CENTER_MODELS:
+        for seq in CENTER_SEQ_LENS:
+            for hw in CENTER_TEMPLATES:
+                cases.append((f"{spec.name}({seq // 1024}k)@{hw}",
+                              spec, seq, hw))
+    return cases
+
+
+def arch_gemms(arch_id: str, seq: int = 4096,
+               batch: int = 1) -> list[tuple[str, Gemm, int]]:
+    """GEMM extraction for the repo's assigned architectures.
+
+    Attention-free blocks (RWKV6, Mamba2) contribute their projection
+    GEMMs; their recurrent scans are not GEMMs and are handled by the
+    dedicated kernels instead (DESIGN.md §Arch-applicability).
+    """
+    from ..configs import get_config
+    cfg = get_config(arch_id)
+    m = seq * batch
+    L, d = cfg.layers, cfg.d_model
+    out: list[tuple[str, Gemm, int]] = []
+    n_attn = cfg.attention_layer_count()
+    if n_attn:
+        H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+        out += [
+            ("attn_q_proj", Gemm(m, H * hd, d, "attn_q_proj"), n_attn),
+            ("attn_kv_proj", Gemm(m, KV * hd, d, "attn_kv_proj"), 2 * n_attn),
+            ("attn_score", Gemm(m, seq, hd, "attn_score"), n_attn * H),
+            ("attn_context", Gemm(m, hd, seq, "attn_context"), n_attn * H),
+            ("attn_output", Gemm(m, d, H * hd, "attn_output"), n_attn),
+        ]
+    n_ssm = cfg.ssm_layer_count()
+    if n_ssm:
+        inner = cfg.ssm_inner_dim()
+        out += [
+            ("ssm_in_proj", Gemm(m, 2 * inner, d, "ssm_in_proj"), n_ssm),
+            ("ssm_out_proj", Gemm(m, d, inner, "ssm_out_proj"), n_ssm),
+        ]
+    n_rwkv = cfg.rwkv_layer_count()
+    if n_rwkv:
+        out += [
+            ("rwkv_time_mix", Gemm(m, d, d, "rwkv_time_mix"), 4 * n_rwkv),
+            ("rwkv_channel_mix", Gemm(m, cfg.d_ff, d, "rwkv_channel_mix"),
+             n_rwkv),
+            ("rwkv_channel_out", Gemm(m, d, cfg.d_ff, "rwkv_channel_out"),
+             n_rwkv),
+        ]
+    if cfg.n_experts:
+        m_exp = max(1, m * cfg.top_k // cfg.n_experts)
+        n_mats = cfg.n_experts + cfg.shared_experts
+        out += [
+            ("mlp_gate_up", Gemm(m_exp, cfg.d_ff, d, "mlp_gate_up"),
+             2 * L * n_mats),
+            ("mlp_down", Gemm(m_exp, d, cfg.d_ff, "mlp_down"), L * n_mats),
+        ]
+    elif not n_rwkv and cfg.d_ff:
+        n_mlp = cfg.mlp_layer_count()
+        out += [
+            ("mlp_gate_up", Gemm(m, cfg.d_ff, d, "mlp_gate_up"), 2 * n_mlp),
+            ("mlp_down", Gemm(m, d, cfg.d_ff, "mlp_down"), n_mlp),
+        ]
+    out.append(("lm_head", Gemm(1, cfg.vocab, d, "lm_head"), 1))
+    return out

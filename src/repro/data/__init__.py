@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, global_arrays, host_batch
+
+__all__ = ["DataConfig", "global_arrays", "host_batch"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  goma_gemm   — GEMM whose BlockSpec tiling + grid walk order come from
+                the GOMA exact solver on the HBM->VMEM->MXU hierarchy
+                (the paper's technique as a kernel planner).
+  wkv6        — RWKV-6 chunked recurrence (rwkv6-7b's scan hot-spot).
+  mamba2_ssd  — Mamba2 SSD chunked scan (zamba2-2.7b's hot-spot).
+
+ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles every
+kernel is validated against (interpret mode on CPU, compiled on TPU).
+"""
+from .goma_gemm import goma_matmul
+from .mamba2_ssd import ssd_pallas
+from .ops import gemm, gemm_plan_info
+from .ref import matmul_ref, ssd_ref, wkv6_ref
+from .wkv6 import wkv6_pallas
+
+__all__ = ["gemm", "gemm_plan_info", "goma_matmul", "matmul_ref",
+           "ssd_pallas", "ssd_ref", "wkv6_pallas", "wkv6_ref"]

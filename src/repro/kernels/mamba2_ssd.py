@@ -1,0 +1,85 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+zamba2-2.7b's non-GEMM hot spot.  Same TPU shape as the WKV6 kernel: one
+(batch, head) stream per grid row, chunk index innermost, the (P x N)
+state carried in VMEM scratch across consecutive grid steps; all decay
+factors are exps of non-positive log differences (numerically safe).
+
+Math (models/ssm.py): S_t = a_t S_{t-1} + dt_t x_t B_t^T,
+y_t = C_t^T S_t  (the D skip term is applied by the caller).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xh_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, so_ref,
+                state_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xh = xh_ref[0, :, 0, :].astype(jnp.float32)       # (C, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)          # (C,)
+    a = -jnp.exp(a_ref[0].astype(jnp.float32))        # scalar A < 0
+    Bm = b_ref[0].astype(jnp.float32)                 # (C, N)
+    Cm = c_ref[0].astype(jnp.float32)                 # (C, N)
+    state = state_ref[...]                            # (P, N)
+
+    la = dt * a                                       # (C,), <= 0
+    cum = jnp.cumsum(la)                              # (C,)
+    total = cum[-1]
+    xdt = xh * dt[:, None]                            # (C, P)
+
+    # intra-chunk: y[t] += sum_{s<=t} exp(cum[t]-cum[s]) (C_t.B_s) xdt[s]
+    Cn = Bm.shape[0]
+    seg = cum[:, None] - cum[None, :]                 # (C, C), <=0 on tril
+    tri = jnp.tril(jnp.ones((Cn, Cn), jnp.bool_))
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = (Cm @ Bm.T) * decay                      # (C, C)
+    y = scores @ xdt                                  # (C, P)
+    # inter-chunk: y[t] += exp(cum[t]) * C_t @ state^T
+    y = y + jnp.exp(cum)[:, None] * (Cm @ state.T)
+
+    # state update: S <- exp(total) S + (xdt . exp(total-cum))^T B
+    suffix = jnp.exp(total - cum)[:, None]            # (C, 1)
+    new_state = jnp.exp(total) * state + (xdt * suffix).T @ Bm
+    state_ref[...] = new_state
+    so_ref[0, 0, :, :] = new_state    # final chunk's write survives
+    o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
+
+
+def ssd_pallas(xh, dt, a_log, Bm, Cm, *, chunk: int = 64,
+               interpret: bool = False):
+    """xh: (B,S,H,P); dt: (B,S,H); a_log: (H,); Bm/Cm: (B,S,N).
+
+    Returns (y: (B,S,H,P) WITHOUT the D*x skip term (caller adds it),
+    final_state: (B,H,P,N))."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, "pad sequence to the chunk size first"
+    grid = (B, H, S // chunk)
+
+    x_spec = pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0))
+    dt_spec = pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h))
+    a_spec = pl.BlockSpec((1,), lambda b, h, c: (h,))
+    bn_spec = pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0))
+    s_spec = pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0))
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, dt_spec, a_spec, bn_spec, bn_spec],
+        out_specs=(x_spec, s_spec),
+        out_shape=(jax.ShapeDtypeStruct((B, S, H, P), xh.dtype),
+                   jax.ShapeDtypeStruct((B, H, P, N), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xh, dt, a_log, Bm, Cm)

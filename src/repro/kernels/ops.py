@@ -1,0 +1,45 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``gemm`` is the user-facing entry: it pads to the GOMA plan's MXU-aligned
+shape, dispatches the Pallas kernel, and slices the result back.  On
+non-TPU backends it runs the kernel in interpret mode (CPU correctness
+path) unless ``force_xla=True`` picks the plain XLA dot instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.tpu_mapping import plan_gemm_tiling
+from .goma_gemm import goma_matmul
+from .ref import matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "force_xla"))
+def gemm(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool | None = None,
+         force_xla: bool = False) -> jnp.ndarray:
+    """C[M,N] = A[M,K] @ B[K,N] through the GOMA-planned Pallas kernel."""
+    if force_xla:
+        return matmul_ref(a, b)
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    plan = plan_gemm_tiling(M, N, K,
+                            dtype_bytes=jnp.dtype(a.dtype).itemsize)
+    pm, pn, pk = plan.padded
+    a_p = jnp.pad(a, ((0, pm - M), (0, pk - K)))
+    b_p = jnp.pad(b, ((0, pk - K), (0, pn - N)))
+    itp = (not _on_tpu()) if interpret is None else interpret
+    out = goma_matmul(a_p, b_p, plan, interpret=itp)
+    return out[:M, :N]
+
+
+def gemm_plan_info(M: int, N: int, K: int, dtype_bytes: int = 2):
+    """Expose the GOMA plan (for logging / EXPERIMENTS.md §Perf)."""
+    return plan_gemm_tiling(M, N, K, dtype_bytes=dtype_bytes)

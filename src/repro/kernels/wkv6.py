@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence (chunked form).
+
+The WKV scan is rwkv6-7b's non-GEMM hot spot (the arch with the best
+roofline fraction in §Roofline).  TPU adaptation of the CUDA chunked
+kernels: one (batch, head) stream per grid row, chunk index innermost so
+the (P x P) state lives in VMEM scratch across consecutive grid steps;
+intra-chunk pairwise decays are computed as exp of *non-positive* log
+differences (numerically safe — no separate exp(+cum) factors), giving
+MXU-shaped (C,C) score matrices.
+
+Math (see models/rwkv.py): S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, so_ref,
+                 state_ref, *, chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)        # (C, P)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    lw = lw_ref[0, :, 0, :].astype(jnp.float32)      # log decay < 0
+    u = u_ref[0, :].astype(jnp.float32)              # (P,)
+    state = state_ref[...]                           # (P, P)
+
+    cum = jnp.cumsum(lw, axis=0)                     # (C, P)
+    cum_tm1 = cum - lw                               # exclusive cumsum
+    total = cum[-1]                                  # (P,)
+
+    # intra-chunk: y[t] += sum_{s<t} (r_t . exp(cum_tm1[t]-cum[s]) . k_s) v_s
+    seg = cum_tm1[:, None, :] - cum[None, :, :]      # (C, C, P), <= 0 on tri
+    C = r.shape[0]
+    tri = jnp.tril(jnp.ones((C, C), jnp.bool_), -1)
+    decay = jnp.where(tri[:, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("tp,tsp,sp->ts", r, decay, k)
+    y = scores @ v                                   # (C, P)
+    # bonus diagonal
+    y = y + jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+    # inter-chunk: y[t] += (r_t . exp(cum_tm1[t])) @ state
+    y = y + (r * jnp.exp(cum_tm1)) @ state
+
+    # state update: S <- diag(exp(total)) S + (k . exp(total - cum))^T v
+    new_state = (jnp.exp(total)[:, None] * state
+                 + (k * jnp.exp(total[None, :] - cum)).T @ v)
+    state_ref[...] = new_state
+    so_ref[0, 0, :, :] = new_state    # final chunk's write survives
+    o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
+
+
+def wkv6_pallas(r, k, v, logw, u, *, chunk: int = 64,
+                interpret: bool = False):
+    """r/k/v/logw: (B, S, H, P); u: (H, P).
+    Returns (y: (B, S, H, P), final_state: (B, H, P, P))."""
+    B, S, H, P = r.shape
+    assert S % chunk == 0, "pad sequence to the chunk size first"
+    grid = (B, H, S // chunk)
+
+    def xmap(b, h, c):
+        return (b, c, h, 0)
+
+    spec = pl.BlockSpec((1, chunk, 1, P), xmap)
+    u_spec = pl.BlockSpec((1, P), lambda b, h, c: (h, 0))
+    s_spec = pl.BlockSpec((1, 1, P, P), lambda b, h, c: (b, h, 0, 0))
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, u_spec],
+        out_specs=(spec, s_spec),
+        out_shape=(jax.ShapeDtypeStruct((B, S, H, P), r.dtype),
+                   jax.ShapeDtypeStruct((B, H, P, P), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((P, P), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

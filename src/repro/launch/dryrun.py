@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower+compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); 512 fake host devices back the production meshes.
+
+For every cell this script:
+  1. builds the model, shape-only params (jax.eval_shape — no allocation),
+  2. constructs the jitted entry (train_step / prefill / decode_step) with
+     explicit in_shardings from repro.sharding,
+  3. ``.lower().compile()`` on the 16x16 (single-pod) and 2x16x16
+     (multi-pod) meshes — success proves the distribution config is
+     coherent (sharding mismatches, compile-time OOM, unsupported
+     collectives all fail here),
+  4. records memory_analysis / cost_analysis / per-collective traffic and
+     the three roofline terms to benchmarks/results/dryrun/<cell>.json.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import gzip
+import json
+import math
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.roofline import (Roofline, model_flops_estimate,
+                                   parse_collectives)
+from repro.models import build_model
+from repro.sharding import (cache_shardings, data_shardings,
+                            param_shardings)
+from repro.training import optimizer as opt
+from repro.training.train_step import make_train_step
+
+RESULTS_DIR = (pathlib.Path(__file__).resolve().parents[3]
+               / "benchmarks" / "results" / "dryrun")
+
+
+def _cell_fns(model, cfg, shape, mesh, sharding_mode: str):
+    """Returns (fn, example_args_specs, in_shardings)."""
+    params_shapes = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+    params_sh = param_shardings(params_shapes, mesh, mode=sharding_mode)
+    specs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(opt.init_state, params_shapes)
+        opt_sh = param_shardings(opt_shapes, mesh, mode=sharding_mode)
+        opt_sh["step"] = jax.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        step = make_train_step(model, opt.AdamWConfig(), remat=True)
+        args = (params_shapes, opt_shapes, specs)
+        shardings = (params_sh, opt_sh, data_shardings(specs, mesh))
+        return step, args, shardings
+
+    if shape.kind == "prefill":
+        # VLM prefill caches hold the patch prefix + the token context
+        extra = cfg.frontend_len if cfg.family == "vlm" else 0
+
+        def fn(params, batch):
+            logits, cache = model.prefill(params, batch,
+                                          max_len=shape.seq_len + extra)
+            return logits  # cache layout checked by the decode cell
+        args = (params_shapes, specs)
+        shardings = (params_sh, data_shardings(specs, mesh))
+        return fn, args, shardings
+
+    # decode: one new token against a seq_len cache
+    cache_spec = specs["cache"]
+
+    def fn(params, cache, tokens, index):
+        return model.decode_step(params, cache, tokens, index)
+    args = (params_shapes, cache_spec, specs["tokens"], specs["index"])
+    rep = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    shardings = (params_sh, cache_shardings(cache_spec, mesh),
+                 data_shardings({"t": specs["tokens"]}, mesh)["t"], rep)
+    return fn, args, shardings
+
+
+def reanalyze_cell(out_path: pathlib.Path) -> dict | None:
+    """Recompute hlo_analysis / collectives / roofline from the stored
+    compiled HLO without recompiling."""
+    rec = json.loads(out_path.read_text())
+    if rec.get("status") != "ok":
+        return rec
+    hlo_path = out_path.with_suffix("").with_suffix("")  # strip .json
+    hlo_path = out_path.parent / (out_path.stem + ".hlo.txt.gz")
+    if not hlo_path.exists():
+        return None
+    with gzip.open(hlo_path, "rt") as f:
+        hlo = f.read()
+    corrected = analyze_hlo(hlo)
+    coll = parse_collectives(hlo, num_devices=rec["chips"])
+    model_flops = model_flops_estimate(
+        get_config(rec["arch"]), SHAPES[rec["shape"]], rec["n_params"])
+    rl = Roofline(flops=corrected["flops"], hbm_bytes=corrected["bytes"],
+                  link_bytes=coll.link_bytes, chips=rec["chips"],
+                  model_flops=model_flops)
+    rec["hlo_analysis"] = corrected
+    rec["collectives"] = coll.as_dict()
+    rec["roofline"] = rl.as_dict()
+    out_path.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, sharding_mode: str = "fsdp", force: bool = False,
+             reanalyze: bool = False, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    mesh_name = "pod512" if multi_pod else "pod256"
+    cell = f"{arch}_{shape_name}_{mesh_name}_{sharding_mode}"
+    if tag:
+        cell += f"_{tag}"
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS_DIR / f"{cell}.json"
+    if out_path.exists() and reanalyze:
+        rec = reanalyze_cell(out_path)
+        if rec is not None:
+            return rec
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    skip = dict(cfg.skipped_shapes()).get(shape_name)
+    if skip is not None:
+        rec = {"cell": cell, "status": "skipped", "reason": skip}
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    try:
+        fn, args, shardings = _cell_fns(model, cfg, shape, mesh,
+                                        sharding_mode)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=shardings)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        chips = mesh.devices.size
+        coll = parse_collectives(hlo, num_devices=chips)
+        # trip-count-aware static analysis (cost_analysis visits while
+        # bodies once — see launch/hlo_analysis.py)
+        corrected = analyze_hlo(hlo)
+        hlo_path = RESULTS_DIR / f"{cell}.hlo.txt.gz"
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+
+        params_shapes = jax.eval_shape(
+            lambda: model.init_params(jax.random.PRNGKey(0)))
+        n_params = sum(math.prod(l.shape) for l in
+                       jax.tree.leaves(params_shapes))
+        rl = Roofline(
+            flops=corrected["flops"],
+            hbm_bytes=corrected["bytes"],
+            link_bytes=coll.link_bytes, chips=chips,
+            model_flops=model_flops_estimate(cfg, shape, n_params))
+        mem_rec = {}
+        for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes"):
+            mem_rec[k] = getattr(mem, k, None)
+        rec = {
+            "cell": cell, "status": "ok", "arch": arch,
+            "shape": shape_name, "mesh": mesh_name,
+            "sharding": sharding_mode, "chips": chips,
+            "n_params": n_params,
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "memory": mem_rec,
+            "cost": {k: v for k, v in cost.items()
+                     if isinstance(v, (int, float))},
+            "hlo_analysis": corrected,
+            "collectives": coll.as_dict(),
+            "roofline": rl.as_dict(),
+        }
+    except Exception as e:
+        rec = {"cell": cell, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+    out_path.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["pod256", "pod512", "both"],
+                    default="both")
+    ap.add_argument("--sharding", choices=["fsdp", "tp"], default="fsdp")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute analyses from stored HLO (no compile)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (§Perf variants)")
+    ap.add_argument("--tag", type=str, default="",
+                    help="cell-name suffix for variants")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            v = {"true": True, "false": False}.get(v.lower(), v)
+        overrides[k] = v
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    ok = err = skipped = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shape_names = ([args.shape] if args.shape
+                       else [s.name for s in cfg.shapes()]
+                       + [n for n, _ in cfg.skipped_shapes()])
+        for shape_name in shape_names:
+            pods = {"pod256": [False], "pod512": [True],
+                    "both": [False, True]}[args.mesh]
+            for mp in pods:
+                rec = run_cell(arch, shape_name, mp,
+                               sharding_mode=args.sharding,
+                               force=args.force, reanalyze=args.reanalyze,
+                               overrides=overrides or None, tag=args.tag)
+                st = rec["status"]
+                ok += st == "ok"
+                err += st == "error"
+                skipped += st == "skipped"
+                line = f"[{st:7s}] {rec['cell']}"
+                if st == "ok":
+                    r = rec["roofline"]
+                    line += (f" compile={rec['compile_s']}s "
+                             f"bottleneck={r['bottleneck']} "
+                             f"frac={r['roofline_fraction']:.3f}")
+                elif st == "error":
+                    line += " " + rec["error"][:120]
+                print(line, flush=True)
+    print(f"dry-run: {ok} ok, {skipped} skipped, {err} errors")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

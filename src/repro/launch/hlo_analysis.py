@@ -1,0 +1,306 @@
+"""Static FLOP / HBM-byte analysis of post-SPMD compiled HLO text.
+
+XLA's ``HloCostAnalysis`` (behind ``compiled.cost_analysis()``) visits a
+while body ONCE — under scan-over-layers that undercounts flops/bytes by
+the layer count.  The compiled HLO annotates every while with
+``backend_config={"known_trip_count":{"n":...}}``, so an exact correction
+is a call-graph walk multiplying each computation's local costs by its
+trip multiplier:
+
+  * flops: dot/convolution ops (2 x |result| x contraction extent) — the
+    MXU work; elementwise flops are ignored (VPU, not the roofline term),
+  * bytes: per *top-level* op (kernel granularity): operand + result
+    sizes; intra-fusion intermediates are registers/VMEM and excluded,
+  * while bodies/conditions multiplied by known_trip_count; fusion and
+    reduction-lambda computations propagate flops only (their traffic is
+    the calling op's operands/results).
+
+Operand shapes are resolved through a per-computation symbol table
+(compiled HLO prints operands as bare %names).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->\s*(.*)\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\(.*?\)|\w+\[[\d,]*\](?:\{[^}]*\})?|\w+\[\])\s*"
+    r"([\w\-]+)\((.*)$")
+_NAME_REF_RE = re.compile(r"%([\w.\-]+)")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "copy-done", "all-reduce-done", "all-gather-done",
+             "collective-permute-done"}
+
+
+def _strip_attrs(s: str) -> str:
+    for key in (" metadata=", " backend_config=", " sharding=",
+                " frontend_attributes="):
+        i = s.find(key)
+        if i >= 0:
+            s = s[:i]
+    return s
+
+
+def _type_bytes(type_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_text):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _type_dims(type_text: str) -> list[int] | None:
+    m = _SHAPE_RE.search(type_text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+# ops whose traffic is the RESULT size, not the (possibly huge) operand:
+# slicing reads only the addressed region
+_SLICING_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+@dataclasses.dataclass
+class _Comp:
+    flops: float = 0.0
+    bytes_: float = 0.0
+    calls: list = dataclasses.field(default_factory=list)
+    # (callee, multiplier, flops_only)
+    root_op: str = ""
+    # deferred fusion byte records: (callee, result_bytes, [operand_bytes])
+    fusion_bytes: list = dataclasses.field(default_factory=list)
+    # per-parameter access pattern inside this computation (for fusion
+    # byte resolution): param order, full sizes, slice-consumed sizes and
+    # whether any non-slicing op touches the param
+    params: list = dataclasses.field(default_factory=list)
+    param_full: dict = dataclasses.field(default_factory=dict)
+    param_slice: dict = dataclasses.field(default_factory=dict)
+    param_nonslice: set = dataclasses.field(default_factory=set)
+    dus_update_bytes: float = 0.0   # dynamic-update-slice regions inside
+
+
+def parse_computations(hlo: str) -> tuple[dict, str]:
+    comps: dict[str, _Comp] = {}
+    entry = None
+    cur: _Comp | None = None
+    symtab: dict[str, str] = {}
+    alias: dict[str, str] = {}
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        hm = _HDR_RE.match(s)
+        if hm and "=" not in s.split("(")[0]:
+            name = hm.group(2)
+            cur = comps.setdefault(name, _Comp())
+            symtab = {}
+            alias = {}
+            # header params: "pname: f32[8,16,64], qname: (f32[], s32[])"
+            args = hm.group(3)
+            for pm in re.finditer(r"([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                  args):
+                symtab[pm.group(1)] = pm.group(2)
+            if hm.group(1):
+                entry = name
+            continue
+        if s == "}" or s.startswith("} "):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(_strip_attrs(s))
+        if not om:
+            continue
+        res_name, res_type, opcode, operands_etc = om.groups()
+        symtab[res_name] = res_type
+        if "ROOT" in s.split("=")[0]:
+            cur.root_op = opcode
+        # param access-pattern tracking (fusion byte resolution); bitcasts
+        # are transparent aliases of their operand
+        if opcode == "parameter":
+            pm = re.match(r"\s*(\d+)", operands_etc)
+            idx = int(pm.group(1)) if pm else len(cur.params)
+            while len(cur.params) <= idx:
+                cur.params.append(None)
+            cur.params[idx] = res_name
+            cur.param_full[res_name] = _type_bytes(res_type)
+        refs_all = _NAME_REF_RE.findall(operands_etc)
+        resolve = lambda r: alias.get(r, r)
+        if opcode == "bitcast" and refs_all:
+            alias[res_name] = resolve(refs_all[0])
+        elif opcode in _SLICING_OPS and refs_all:
+            first = resolve(refs_all[0])
+            if first in cur.param_full:
+                cur.param_slice[first] = (cur.param_slice.get(first, 0.0)
+                                          + _type_bytes(res_type))
+            for r in refs_all[1:]:
+                rr = resolve(r)
+                if rr in cur.param_full:
+                    cur.param_nonslice.add(rr)  # index params (tiny)
+        elif opcode == "dynamic-update-slice" and refs_all:
+            upd_bytes = sum(_type_bytes(symtab.get(r, ""))
+                            for r in refs_all[1:2])
+            cur.dus_update_bytes += upd_bytes
+            for r in refs_all[1:]:
+                rr = resolve(r)
+                if rr in cur.param_full:
+                    cur.param_nonslice.add(rr)
+            # in-place target: charged at update size via dus_update
+        else:
+            for r in refs_all:
+                rr = resolve(r)
+                if rr in cur.param_full:
+                    cur.param_nonslice.add(rr)
+        if opcode in _FREE_OPS:
+            continue
+        attrs = s  # attrs like trip counts live on the unstripped line
+
+        # ---- flops: dot (result elems x 2 x contraction extent) ----------
+        if opcode == "dot":
+            res_dims_elems = 1
+            rd = _type_dims(res_type)
+            if rd is not None:
+                for d in rd:
+                    res_dims_elems *= d
+            # lhs operand: first %name reference
+            refs = _NAME_REF_RE.findall(operands_etc)
+            contract = 1
+            if refs and refs[0] in symtab:
+                lhs_dims = _type_dims(symtab[refs[0]])
+                mc = _LHS_CONTRACT_RE.search(s)
+                if lhs_dims and mc:
+                    for idx in mc.group(1).split(","):
+                        if idx:
+                            contract *= lhs_dims[int(idx)]
+            cur.flops += 2.0 * res_dims_elems * contract
+
+        # ---- call edges ---------------------------------------------------
+        if opcode == "while":
+            trip = 1
+            tm = _TRIP_RE.search(attrs)
+            if tm:
+                trip = int(tm.group(1))
+            bm = re.search(r"body=%?([\w.\-]+)", s)
+            if bm:
+                cur.calls.append((bm.group(1), trip, False))
+            cm = re.search(r"condition=%?([\w.\-]+)", s)
+            if cm:
+                cur.calls.append((cm.group(1), trip, True))
+            continue  # carried-buffer traffic counted inside the body
+        if opcode == "fusion":
+            fm = re.search(r"calls=%?([\w.\-]+)", s)
+            if fm:
+                cur.calls.append((fm.group(1), 1, True))
+        elif opcode == "conditional":
+            bm = re.search(r"branch_computations=\{([^}]*)\}", s)
+            if bm:
+                for b in bm.group(1).split(","):
+                    cur.calls.append((b.strip().lstrip("%"), 1, False))
+        else:
+            am = re.search(r"to_apply=%?([\w.\-]+)", s)
+            if am:  # reduction lambdas etc: flops only
+                cur.calls.append((am.group(1), 1, True))
+
+        # ---- bytes: result + resolved operand shapes ----------------------
+        res_bytes = _type_bytes(res_type)
+        op_bytes = []
+        for ref in _NAME_REF_RE.findall(operands_etc):
+            t = symtab.get(ref)
+            if t:
+                op_bytes.append(_type_bytes(t))
+        if opcode in _SLICING_OPS:
+            # read the addressed region + write the result
+            cur.bytes_ += 2.0 * res_bytes
+        elif opcode == "dynamic-update-slice":
+            # in-place: read+write the update region only
+            upd = sorted(op_bytes)[:-1] if len(op_bytes) > 1 else op_bytes
+            cur.bytes_ += 2.0 * sum(upd)
+        elif opcode == "broadcast":
+            cur.bytes_ += res_bytes + min(op_bytes, default=0)
+        elif opcode == "fusion":
+            fm2 = re.search(r"calls=%?([\w.\-]+)", s)
+            cur.fusion_bytes.append(
+                (fm2.group(1) if fm2 else "", res_bytes, op_bytes))
+        else:
+            cur.bytes_ += res_bytes + sum(op_bytes)
+    return comps, entry or "main"
+
+
+def _resolve_fusion_bytes(comps: dict) -> None:
+    """A fusion kernel's true traffic per parameter: if the callee touches
+    a parameter ONLY through slicing ops (dynamic-slice/gather/slice —
+    possibly followed by bitcasts), the kernel reads the addressed region,
+    not the full buffer.  This matters enormously for scan-over-layers
+    weight stacks and flash-attention KV blocks, where the stacked operand
+    is sliced every iteration.  In-place dynamic-update-slice roots are
+    charged at the update-region size instead of the full result."""
+    for c in comps.values():
+        for callee, res_bytes, op_bytes in c.fusion_bytes:
+            cc = comps.get(callee)
+            if cc is None:
+                c.bytes_ += res_bytes + sum(op_bytes)
+                continue
+            total = 0.0
+            for i, pname in enumerate(cc.params):
+                if pname is None:
+                    continue
+                full = (op_bytes[i] if i < len(op_bytes)
+                        else cc.param_full.get(pname, 0.0))
+                if pname in cc.param_nonslice:
+                    total += full
+                elif pname in cc.param_slice:
+                    total += min(cc.param_slice[pname], full)
+                # untouched params: 0 bytes
+            if cc.root_op == "dynamic-update-slice" or (
+                    cc.dus_update_bytes and cc.root_op in ("bitcast",
+                                                           "tuple")):
+                total += cc.dus_update_bytes   # in-place write region
+            else:
+                total += res_bytes
+            c.bytes_ += total
+
+
+def analyze_hlo(hlo: str) -> dict:
+    """Trip-count-aware per-device totals: {"flops", "bytes"}."""
+    comps, entry = parse_computations(hlo)
+    _resolve_fusion_bytes(comps)
+    memo: dict[str, tuple[float, float]] = {}
+    stack: set[str] = set()
+
+    def total(name: str) -> tuple[float, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0)
+        stack.add(name)
+        c = comps[name]
+        f, b = c.flops, c.bytes_
+        for callee, mult, flops_only in c.calls:
+            cf, cb = total(callee)
+            f += mult * cf
+            if not flops_only:
+                b += mult * cb
+        stack.discard(name)
+        memo[name] = (f, b)
+        return memo[name]
+
+    f, b = total(entry)
+    return {"flops": f, "bytes": b}

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS *before* any jax
+import to fake 512 host devices (launch/dryrun.py lines 1-2).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1-D (data) mesh + model=1.
+
+    Used by smoke tests / the tiny-training example on CPU."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,225 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md
+§Roofline):
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = per-chip ICI bytes / link_bw
+
+``compiled.cost_analysis()`` runs on the post-SPMD *per-device* module, so
+its flops/bytes are already per-chip — the formulas above divide the
+GLOBAL quantities by chips; here we use the per-device numbers directly.
+Collective bytes are NOT in cost_analysis, so we parse the post-SPMD HLO
+text and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, converted to per-chip
+link-bytes with ring formulas.
+
+TPU v5e-class constants (per assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    m = _SHAPE_RE.match(text.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))   # [num_groups, group_size]
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-device collective traffic summary from one compiled HLO."""
+
+    ops: dict            # kind -> {"count": int, "result_bytes": int}
+    link_bytes: float    # per-chip ICI bytes (ring formulas)
+
+    def as_dict(self):
+        return {"ops": self.ops, "link_bytes": self.link_bytes}
+
+
+def parse_collectives(hlo_text: str, *, num_devices: int) -> CollectiveStats:
+    ops: dict[str, dict] = {}
+    link_bytes = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        # result shape then op name:  f32[...]  all-reduce-start(...)
+        m = re.match(r"(?:\([^)]*\)|\S+)\s+([\w-]+)\(", rhs)
+        if not m:
+            continue
+        op = m.group(1)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue
+        res_bytes = _shape_bytes(rhs)
+        if res_bytes == 0:
+            # tuple results: sum inner shapes
+            inner = re.findall(r"(\w+\[[\d,]*\])", rhs.split("(")[0])
+            res_bytes = sum(_shape_bytes(t) for t in inner)
+        g = _group_size(s, num_devices)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if base == "all-reduce":
+            per_chip = 2.0 * res_bytes * frac       # reduce-scatter + AG
+        elif base == "all-gather":
+            per_chip = res_bytes * frac             # result is gathered
+        elif base == "reduce-scatter":
+            per_chip = res_bytes * (g - 1) if g > 1 else 0  # result shard
+        elif base == "all-to-all":
+            per_chip = res_bytes * frac
+        else:  # collective-permute
+            per_chip = res_bytes
+        d = ops.setdefault(base, {"count": 0, "result_bytes": 0,
+                                  "link_bytes": 0.0})
+        d["count"] += 1
+        d["result_bytes"] += res_bytes
+        d["link_bytes"] += per_chip
+        link_bytes += per_chip
+    return CollectiveStats(ops=ops, link_bytes=link_bytes)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # HLO flops (per device, post-SPMD)
+    hbm_bytes: float           # HLO bytes accessed (per device)
+    link_bytes: float          # per-chip collective bytes
+    chips: int
+    model_flops: float = 0.0   # GLOBAL 6*N*D (or per-graph estimate)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.link_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / modeled step time (bound by max term)."""
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound > 0 else 0.0
+
+    @property
+    def flops_efficiency(self) -> float:
+        """MODEL_FLOPS / global HLO_FLOPs — remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "link_bytes": self.link_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction,
+            "flops_efficiency": self.flops_efficiency,
+        }
+
+
+def model_flops_estimate(cfg, shape, n_params: int) -> float:
+    """Useful MODEL_FLOPS per step.
+
+    Parameter term: 6*N*D training / 2*N*D prefill / 2*N_active per decode
+    token (MoE counts active params).  Attention term: the quadratic
+    score+context GEMMs (4*B*S^2*H*hd per layer forward, x3 with backward,
+    halved causal) — at 32k context this legitimately dominates small
+    models and must count as useful work, not waste.  SSM/RWKV chunked
+    scans add their (sub-quadratic) state-update flops."""
+    active = n_params
+    if cfg.n_experts:
+        expert_frac = (cfg.top_k + cfg.shared_experts) / max(
+            cfg.n_experts + cfg.shared_experts, 1)
+        dense_part = 0.35
+        active = n_params * (dense_part + (1 - dense_part) * expert_frac)
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+
+    # attention quadratic useful work (causal: half the square)
+    n_attn = cfg.attention_layer_count()
+    H, hd = cfg.n_heads, cfg.head_dim
+    if shape.kind in ("train", "prefill") and n_attn:
+        attn = n_attn * 4.0 * B * (S * S / 2) * H * hd
+        if cfg.alt_local_global and cfg.window:
+            local = n_attn // 2
+            attn = ((n_attn - local) * 4.0 * B * (S * S / 2) * H * hd
+                    + local * 4.0 * B * S * min(cfg.window, S) * H * hd)
+    else:
+        attn = 0.0
+
+    # recurrent-state useful work (chunked SSD/WKV): ~4*B*S*inner*state
+    rec = 0.0
+    if cfg.ssm_layer_count() and shape.kind in ("train", "prefill"):
+        d_inner = cfg.ssm_inner_dim()
+        rec += cfg.ssm_layer_count() * 4.0 * B * S * d_inner * cfg.ssm_state
+    if cfg.rwkv_layer_count() and shape.kind in ("train", "prefill"):
+        rec += cfg.rwkv_layer_count() * 4.0 * B * S * cfg.d_model * 64
+
+    if shape.kind == "train":
+        return 6.0 * active * tokens + 3.0 * (attn + rec)
+    if shape.kind == "prefill":
+        return 2.0 * active * tokens + (attn + rec)
+    # decode: one token per sequence; attention reads the KV cache
+    dec_attn = n_attn * 4.0 * B * S * H * hd if n_attn else 0.0
+    return 2.0 * active * B + dec_attn

@@ -1,0 +1,4 @@
+"""Model zoo: the 10 assigned architectures as pure-JAX (init, apply) fns."""
+from .model import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,189 @@
+"""Mamba2 (SSD) block in pure JAX — chunked parallel form + decode step.
+
+State-space duality form (Dao & Gu 2024): per head h with scalar decay
+a_t = exp(-softplus-free A * dt_t), state S in R^{P x N}:
+
+    S_t = a_t S_{t-1} + dt_t * x_t B_t^T          y_t = C_t^T S_t + D x_t
+
+Training uses the chunked algorithm (intra-chunk quadratic attention-like
+term with decay mask + inter-chunk state recurrence via lax.scan), which
+is both sub-quadratic in sequence length and MXU-friendly — the TPU
+adaptation of the paper family's GPU kernels (a dedicated Pallas kernel
+backs the hot intra-chunk GEMMs; see repro/kernels).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, dense_init
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssm_init(key, cfg, dtype) -> Params:
+    d_inner, nh, hd, ns = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_dim = d_inner + 2 * ns
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], cfg.d_model,
+                              2 * d_inner + 2 * ns + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1],
+                                     (cfg.conv_kernel, conv_dim),
+                                     jnp.float32)
+                   / math.sqrt(cfg.conv_kernel)).astype(dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(xs: jnp.ndarray, w: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """xs: (B,S,C); w: (K,C).  Depthwise causal conv; returns (y, new_state)
+    where state carries the trailing K-1 inputs for decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xs.shape[0], K - 1, xs.shape[2]), xs.dtype)
+    else:
+        pad = state.astype(xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)
+    wc = w.astype(xs.dtype)
+    y = sum(xp[:, i:i + xs.shape[1], :] * wc[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, nh, hd, ns = ssm_dims(cfg)
+    z, x, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + ns,
+                 2 * d_inner + 2 * ns], axis=-1)
+    return z, x, Bm, Cm, dt
+
+
+def ssd_chunked(xh, dt, a_log, Bm, Cm, D, *, chunk: int,
+                init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P)  dt: (B,S,H)  Bm/Cm: (B,S,N)  a_log: (H,) (A = -exp(a_log))
+    Returns y: (B,S,H,P), final_state: (B,H,P,N).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    C = min(chunk, S)
+    S_orig = S
+    pad = (-S) % C
+    if pad:
+        # zero-contribution padding: dt=0 => decay exp(0)=1, input 0
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    n_chunks = S // C
+    A = -jnp.exp(a_log)                                # (H,)
+    la = dt * A[None, None, :]                         # log decay (B,S,H)
+    xdt = xh * dt[..., None]                           # dt-weighted input
+
+    def resh(t, extra):
+        return t.reshape((Bsz, n_chunks, C) + extra).swapaxes(0, 1)
+
+    la_c = resh(la, (H,))                              # (nc,B,C,H)
+    x_c = resh(xdt, (H, P))
+    B_c = resh(Bm, (N,))
+    C_c = resh(Cm, (N,))
+
+    cum = jnp.cumsum(la_c, axis=2)                     # (nc,B,C,H)
+    total = cum[:, :, -1, :]                           # (nc,B,H)
+
+    # intra-chunk (quadratic in C): y_intra[t] = sum_{s<=t} decay * (C_t.B_s) x_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (nc,B,C,C,H)
+    tri = jnp.tril(jnp.ones((C, C), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("nbtk,nbsk->nbts", C_c, B_c)      # (nc,B,C,C)
+    y_intra = jnp.einsum("nbts,nbtsh,nbshp->nbthp",
+                         scores, decay, x_c)
+
+    # chunk-local suffix state:  sum_s exp(total - cum_s) * x_s B_s^T
+    suffix = jnp.exp(total[:, :, None, :] - cum)          # (nc,B,C,H)
+    chunk_state = jnp.einsum("nbsh,nbshp,nbsk->nbhpk", suffix, x_c, B_c)
+
+    # inter-chunk recurrence over n_chunks
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def body(s_prev, inp):
+        tot, st = inp                                     # (B,H), (B,H,P,N)
+        s_new = s_prev * jnp.exp(tot)[..., None, None] + st
+        return s_new, s_prev
+
+    final_state, s_before = jax.lax.scan(body, init_state,
+                                         (total, chunk_state))
+    # inter-chunk contribution: y[t] += C_t . (decay_to_t * s_before_chunk)
+    pref = jnp.exp(cum)                                   # (nc,B,C,H)
+    y_inter = jnp.einsum("nbtk,nbth,nbhpk->nbthp", C_c, pref, s_before)
+
+    y = (y_intra + y_inter).swapaxes(0, 1).reshape(Bsz, S, H, P)
+    y = y + xh * D[None, None, :, None]
+    return y[:, :S_orig], final_state
+
+
+def ssm_apply(p: Params, cfg, x: jnp.ndarray, *, state=None,
+              conv_state=None, decode: bool = False):
+    """x: (B,S,d_model).  Returns (y, (state, conv_state))."""
+    d_inner, nh, hd, ns = ssm_dims(cfg)
+    zxbcdt = dense(p["in_proj"], x)
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + ns], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    B_, S, _ = x.shape
+    xh = xs.reshape(B_, S, nh, hd).astype(jnp.float32)
+
+    if decode:
+        # single-step recurrence (S == 1)
+        a = jnp.exp(dt[:, 0] * (-jnp.exp(p["A_log"]))[None, :])  # (B,H)
+        if state is None:
+            state = jnp.zeros((B_, nh, hd, ns), jnp.float32)
+        upd = jnp.einsum("bhp,bk->bhpk", xh[:, 0] * dt[:, 0, :, None],
+                         Bm[:, 0].astype(jnp.float32))
+        new_state = state * a[..., None, None] + upd
+        y = jnp.einsum("bhpk,bk->bhp", new_state,
+                       Cm[:, 0].astype(jnp.float32))
+        y = y + xh[:, 0] * p["D"][None, :, None]
+        y = y[:, None]
+    else:
+        y, new_state = ssd_chunked(xh, dt, p["A_log"],
+                                   Bm.astype(jnp.float32),
+                                   Cm.astype(jnp.float32), p["D"],
+                                   chunk=cfg.ssd_chunk, init_state=state)
+    y = y.reshape(B_, S, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    return dense(p["out_proj"], y), (new_state, new_conv)
+
+
+def ssm_ref_scan(p: Params, cfg, x: jnp.ndarray):
+    """O(S) sequential reference for tests (token-by-token recurrence)."""
+    def step(carry, xt):
+        state, conv_state = carry
+        y, (state, conv_state) = ssm_apply(
+            p, cfg, xt[:, None], state=state, conv_state=conv_state,
+            decode=True)
+        return (state, conv_state), y[:, 0]
+    B = x.shape[0]
+    d_inner, nh, hd, ns = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * ns
+    carry0 = (jnp.zeros((B, nh, hd, ns), jnp.float32),
+              jnp.zeros((B, cfg.conv_kernel - 1, conv_dim), x.dtype))
+    _, ys = jax.lax.scan(step, carry0, x.swapaxes(0, 1))
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+A deliberately small but real engine: jitted prefill and decode_step,
+static-shape KV/state caches, batched requests with per-row lengths
+(ragged prefill via right-padding + masked positions), and a
+stop-token / max-token policy.  Used by examples/serve_lm.py and the
+serving integration test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 = greedy
+    stop_token: int | None = None
+    cache_len: int = 512
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=cfg.cache_len))
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, tokens: np.ndarray, *, extra_batch: dict | None
+                 = None, rng: jax.Array | None = None) -> np.ndarray:
+        """tokens: (B, S) right-padded prompt batch; returns (B, new)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens)}
+        if extra_batch:
+            batch.update(extra_batch)
+        logits, cache = self._prefill(self.params, batch)
+        prefix = 0
+        for k in ("patches", "frames"):
+            if extra_batch and k in extra_batch and \
+                    self.model.cfg.family == "vlm":
+                prefix = extra_batch[k].shape[1]
+        out = np.zeros((B, cfg.max_new_tokens), np.int32)
+        cur = self._sample(logits[:, -1], rng)
+        done = np.zeros((B,), bool)
+        for t in range(cfg.max_new_tokens):
+            out[:, t] = np.where(done, cfg.stop_token or 0,
+                                 np.asarray(cur))
+            if cfg.stop_token is not None:
+                done |= np.asarray(cur) == cfg.stop_token
+                if done.all():
+                    break
+            idx = jnp.asarray(prefix + S + t, jnp.int32)
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(cur)[:, None], idx)
+            cur = self._sample(logits[:, -1], rng)
+        return out
+
+    def _sample(self, logits, rng):
+        if self.cfg.temperature <= 0.0 or rng is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        g = jax.random.gumbel(rng, logits.shape)
+        return jnp.argmax(logits / self.cfg.temperature + g,
+                          axis=-1).astype(jnp.int32)

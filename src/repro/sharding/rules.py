@@ -1,0 +1,216 @@
+"""Sharding rules: parameter-path patterns -> PartitionSpec.
+
+Megatron-style TP over the "model" axis, DP over ("pod", "data"); expert
+parallelism reuses the model axis (experts sharded on their leading dim).
+Rules are regex patterns over '/'-joined parameter paths, first match
+wins; scanned layer stacks have a leading layer axis, detected by array
+rank relative to the rule's spec length and padded with None.
+
+The choice of which GEMM operand axis to shard is the mesh-level
+instance of GOMA's walking-axis question — see core/dist_mapping.py for
+the planner that derives these rules' structure from the paper's model.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP = ("pod", "data")      # flattened data-parallel submesh
+TP = "model"
+
+# pattern -> spec for the *unstacked* (single-layer) parameter
+PARAM_RULES: list[tuple[str, P]] = [
+    # embeddings / lm head: vocab on TP
+    (r"embed/e$", P(TP, None)),
+    (r"lm_head/w$", P(None, TP)),
+    # attention: heads (fused into the out feature dim) on TP
+    (r"attn/wq/w$", P(None, TP)),
+    (r"attn/wk/w$", P(None, TP)),
+    (r"attn/wv/w$", P(None, TP)),
+    (r"attn/wo/w$", P(TP, None)),
+    (r"xattn/w[qkv]/w$", P(None, TP)),
+    (r"xattn/wo/w$", P(TP, None)),
+    # gated MLP: d_ff on TP
+    (r"mlp/w[gu]/w$", P(None, TP)),
+    (r"mlp/wd/w$", P(TP, None)),
+    # MoE: experts on TP (EP reuses the TP axis), shared experts like MLP
+    (r"moe/router/w$", P(None, None)),
+    (r"moe/w[gu]$", P(TP, None, None)),
+    (r"moe/wd$", P(TP, None, None)),
+    (r"moe/shared/w[gu]/w$", P(None, TP)),
+    (r"moe/shared/wd/w$", P(TP, None)),
+    # Mamba2: inner channels on TP
+    (r"ssm/in_proj/w$", P(None, TP)),
+    (r"ssm/out_proj/w$", P(TP, None)),
+    (r"ssm/conv_w$", P(None, TP)),
+    (r"ssm/(A_log|D|dt_bias)$", P(TP)),
+    # RWKV6: heads on TP via the feature dim
+    (r"time/w[rkvgw]/w$", P(None, TP)),
+    (r"time/wo/w$", P(TP, None)),
+    (r"time/u$", P(TP, None)),
+    (r"time/(mix|w_bias)$", P()),
+    (r"chan/w[kr]/w$", P(None, TP)),
+    (r"chan/wv/w$", P(TP, None)),
+    (r"chan/mix$", P()),
+    # norms replicated
+    (r"(ln\d?|lnx|ln|final_norm|enc_norm)/(scale|bias)$", P()),
+]
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out, treedef
+
+
+def spec_for_param(path: str, ndim: int) -> P:
+    for pat, spec in PARAM_RULES:
+        if re.search(pat, path):
+            extra = ndim - len(spec)
+            if extra < 0:
+                # rank-reduced edge case: replicate
+                return P()
+            # scanned stacks / grouped stacks: leading axes unsharded
+            return P(*([None] * extra + list(spec)))
+    return P()  # replicate by default
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding entries whose dim does not divide the mesh axes —
+    odd vocabs (49155), GQA kv-heads < TP, batch=1 decode all fall back to
+    replication on that dim instead of failing to lower."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        size = _axis_size(mesh, entry)
+        out.append(entry if size > 1 and dim % size == 0
+                   else (entry if size == 1 else None))
+    return P(*out)
+
+
+def _fsdp_axes(mesh: Mesh) -> tuple[tuple[str, ...], int]:
+    axes = tuple(a for a in DP if a in mesh.axis_names)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return axes, size
+
+
+def apply_fsdp(spec: P, shape: tuple[int, ...], mesh: Mesh,
+               *, min_size: int = 2 ** 16) -> P:
+    """ZeRO/FSDP generalization: additionally shard one free dim of every
+    large parameter over the data axes (params + grads + optimizer states
+    all inherit it).  GSPMD inserts the per-layer all-gather; under
+    scan-over-layers sharding the leading stack dim yields the classic
+    layer-wise gather schedule.  Dims must divide the fsdp size; arrays
+    below ``min_size`` elements stay replicated across data."""
+    axes, size = _fsdp_axes(mesh)
+    if not axes or size == 1:
+        return spec
+    n = 1
+    for s in shape:
+        n *= s
+    if n < min_size:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    fsdp = axes if len(axes) > 1 else axes[0]
+    for i, (dim, cur) in enumerate(zip(shape, entries)):
+        if cur is None and dim % size == 0:
+            entries[i] = fsdp
+            return P(*entries)
+    return spec
+
+
+def param_shardings(params, mesh: Mesh, *, mode: str = "fsdp"):
+    """Pytree of NamedSharding matching ``params``' structure.
+
+    mode="tp": Megatron TP + pure DP replication of params.
+    mode="fsdp" (default): TP + params/opt-state sharded over data too.
+    """
+    flat, treedef = _flatten_with_paths(params)
+    shardings = []
+    for path, leaf in flat:
+        ndim = leaf.ndim if hasattr(leaf, "ndim") else 0
+        spec = spec_for_param(path, ndim)
+        if hasattr(leaf, "shape"):
+            spec = sanitize_spec(spec, leaf.shape, mesh)
+            if mode == "fsdp":
+                spec = apply_fsdp(spec, leaf.shape, mesh)
+        shardings.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def batch_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Shard the leading (batch) dim over all data axes present."""
+    axes = tuple(a for a in DP if a in mesh.axis_names)
+    dp = axes if len(axes) > 1 else (axes[0] if axes else None)
+    ndim = len(shape)
+    spec = P(dp, *([None] * (ndim - 1))) if ndim else P()
+    return sanitize_spec(spec, shape, mesh)
+
+
+def data_shardings(batch, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, batch_spec(x.shape, mesh)), batch)
+
+
+def cache_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """KV/state caches: batch over data axes, heads over model.
+
+    Layouts (trailing dims; any leading layer/group axes stay unsharded):
+      k/v:   (..., B, T, KV, hd)     -> (..., DP, None, TP, None)
+      state: (..., B, H, hd, ns|hd)  -> (..., DP, TP, None, None)
+      conv:  (..., B, K-1, C)        -> (..., DP, None, TP)
+      shift: (..., B, 1, d)          -> (..., DP, None, TP)
+      enc_out: (B, S, d)             -> (DP, None, TP)
+    Every sharded dim must divide its mesh-axis size (GQA kv_heads may be
+    smaller than TP: fall back to replicated heads, as real engines do).
+    """
+    axes = tuple(a for a in DP if a in mesh.axis_names)
+    dp_size = 1
+    for a in axes:
+        dp_size *= mesh.shape[a]
+    dp = axes if len(axes) > 1 else (axes[0] if axes else None)
+    tp_size = mesh.shape.get(TP, 1)
+    ndim = len(shape)
+    leaf = path.split("/")[-1]
+    trailing = {
+        "k": [dp, None, TP, None],
+        "v": [dp, None, TP, None],
+        "state": [dp, TP, None, None],
+        "conv": [dp, None, TP],
+        "tshift": [dp, None, TP],
+        "cshift": [dp, None, TP],
+        "enc_out": [dp, None, TP],
+    }.get(leaf, [dp] + [None] * (ndim - 1))
+    trailing = trailing[-ndim:]
+    spec = [None] * (ndim - len(trailing)) + trailing
+    return sanitize_spec(P(*spec), shape, mesh)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    flat, treedef = _flatten_with_paths(cache_tree)
+    out = [NamedSharding(mesh, cache_spec(path, leaf.shape, mesh))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,96 @@
+"""Checkpointing (atomicity, keep-k, integrity, reshard) + data pipeline
+(determinism, skip-ahead, shard assembly)."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, global_arrays, host_batch
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "b": {"c": jnp.arange(6, dtype=jnp.int32),
+                  "d": jnp.float32(3.5)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    tree = _tree()
+    mgr.save(7, tree)
+    restored, step = mgr.restore(jax.eval_shape(lambda: tree))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_keep_k(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=True)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    mgr.wait()
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2 and steps[-1].endswith(f"{4:010d}")
+    assert mgr.latest_step() == 4
+    assert not list(tmp_path.glob(".tmp_*"))   # atomic publish cleans up
+
+
+def test_corruption_detected(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, _tree())
+    d = next(tmp_path.glob("step_*"))
+    man = json.loads((d / "manifest.json").read_text())
+    man["leaves"][0]["crc32"] ^= 0xFF
+    (d / "manifest.json").write_text(json.dumps(man))
+    with pytest.raises(IOError):
+        mgr.restore(jax.eval_shape(lambda: _tree()))
+
+
+def test_restore_with_shardings(tmp_path):
+    """Reshard-on-load: restore onto an explicit (1-device) mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    tree = _tree()
+    mgr.save(3, tree)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+    restored, _ = mgr.restore(jax.eval_shape(lambda: tree), shardings=sh)
+    assert all(x.sharding == NamedSharding(mesh, P())
+               for x in jax.tree.leaves(restored))
+
+
+def test_data_determinism_and_skip_ahead():
+    cfg = DataConfig(vocab=100, seq_len=32, global_batch=8, seed=1)
+    b1 = host_batch(cfg, step=5)
+    b2 = host_batch(cfg, step=5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = host_batch(cfg, step=6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # shard assembly: rows [2,6) match the full batch slice
+    part = host_batch(cfg, step=5, row_start=2, rows=4)
+    np.testing.assert_array_equal(part["tokens"], b1["tokens"][2:6])
+
+
+def test_data_labels_shifted():
+    cfg = DataConfig(vocab=50, seq_len=16, global_batch=2, seed=0)
+    b = host_batch(cfg, 0)
+    # labels are next-token: consistent within the same underlying stream
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+    assert (b["tokens"] < 50).all() and (b["labels"] < 50).all()
+
+
+def test_global_arrays_on_host_mesh():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=4, seed=0)
+    sh = {"tokens": NamedSharding(mesh, P("data", None)),
+          "labels": NamedSharding(mesh, P("data", None))}
+    arrs = global_arrays(cfg, 0, sh)
+    ref = host_batch(cfg, 0)
+    np.testing.assert_array_equal(np.asarray(arrs["tokens"]),
+                                  ref["tokens"])

@@ -1,0 +1,41 @@
+"""Hardware/mapping co-design sweep (beyond-paper, core/codesign.py)."""
+from repro.core.codesign import (DesignPoint, area_proxy, evaluate_design,
+                                 pareto_frontier, sweep)
+from repro.core.hardware import EYERISS_LIKE
+from repro.core.workloads import QWEN3_0_6B
+
+
+def test_area_proxy_monotone():
+    a = area_proxy(256, 162 * 1024, 424)
+    assert area_proxy(512, 162 * 1024, 424) > a
+    assert area_proxy(256, 324 * 1024, 424) > a
+    assert area_proxy(256, 162 * 1024, 848) > a
+
+
+def test_small_sweep_and_frontier():
+    pts = sweep(EYERISS_LIKE, QWEN3_0_6B, 1024,
+                pe_opts=(64, 256), sram_kib_opts=(64, 162),
+                rf_opts=(64, 424))
+    assert len(pts) == 8
+    assert any(p.feasible for p in pts)
+    front = pareto_frontier(pts)
+    assert front, "frontier must be non-empty"
+    # frontier is sorted by area and strictly improving in EDP
+    for a, b in zip(front, front[1:]):
+        assert b.area > a.area and b.edp < a.edp
+    # no feasible point dominates a frontier point
+    for f in front:
+        for p in pts:
+            if p.feasible:
+                assert not (p.area < f.area and p.edp < f.edp)
+
+
+def test_more_pe_helps_big_gemm():
+    """On a compute-heavy workload, quadrupling PEs cuts delay-driven EDP."""
+    from repro.core.workloads import prefill_gemms
+    wl = [w for w in prefill_gemms(QWEN3_0_6B, 1024)
+          if w[0] == "mlp_gate_up"]
+    small = evaluate_design(EYERISS_LIKE, 64, 162 * 1024, 424, wl)
+    big = evaluate_design(EYERISS_LIKE, 1024, 162 * 1024, 424, wl)
+    assert small.feasible and big.feasible
+    assert big.edp < small.edp

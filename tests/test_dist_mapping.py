@@ -1,0 +1,40 @@
+"""Mesh-level GOMA extension (core/dist_mapping.py): the walking-axis
+geometry ranks sharding choices by ICI traffic."""
+from repro.core import Gemm
+from repro.core.dist_mapping import plan_shard_axis, recommend
+
+
+def test_tall_gemm_prefers_row_sharding():
+    # M >> N, K: B is tiny -> data parallel (x-walk) is cheapest
+    g = Gemm(1_000_000, 1024, 1024)
+    best = recommend(g, 16)
+    assert best.axis == "x"
+
+
+def test_wide_gemm_prefers_col_sharding():
+    # N >> M, K: A is tiny -> tensor parallel (y-walk) is cheapest
+    g = Gemm(1024, 1_000_000, 1024)
+    best = recommend(g, 16)
+    assert best.axis == "y"
+
+
+def test_deep_reduction_prefers_z_sharding():
+    # K >> M, N: P is tiny -> reduction parallel (reduce-scatter) wins,
+    # GOMA's rho boundary case at mesh scale
+    g = Gemm(1024, 1024, 1_000_000)
+    best = recommend(g, 16)
+    assert best.axis == "z"
+    assert "reduce-scatter" in best.collective
+
+
+def test_ranking_is_complete_and_sorted():
+    g = Gemm(4096, 14336, 4096)
+    choices = plan_shard_axis(g, 256, with_backward=True)
+    assert [c.axis for c in choices] != []
+    assert len(choices) == 3
+    assert all(choices[i].ici_bytes_per_chip
+               <= choices[i + 1].ici_bytes_per_chip
+               for i in range(2))
+    # backward doubles-ish the traffic
+    fwd = plan_shard_axis(g, 256, with_backward=False)
+    assert choices[0].ici_bytes_per_chip >= fwd[0].ici_bytes_per_chip

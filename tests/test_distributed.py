@@ -1,0 +1,18 @@
+"""Multi-device integration via subprocess (8 fake CPU devices), so the
+main test session keeps the default single device."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_distributed_smoke():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "dist_smoke.py")],
+        capture_output=True, text=True, timeout=880)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    for marker in ("LOSSES_OK", "RESHARD_OK", "GRADCOMP_OK", "ALL_OK"):
+        assert marker in proc.stdout, proc.stdout

@@ -1,0 +1,92 @@
+"""The three-way model validation (DESIGN.md §3):
+
+  closed form  ==  no-reuse loop-nest reference      (always, by identity)
+  full-reuse loop-nest reference == literal simulator (always, ground truth)
+  closed form  ==  literal simulator                  (whenever the
+        exactness predicate holds; conservative otherwise)
+"""
+import random
+
+import pytest
+
+from repro.core import (EYERISS_LIKE, Gemm, Mapping, analytical_counts,
+                        analytical_energy, closed_form_is_exact,
+                        reference_counts, simulate_counts)
+from repro.core.geometry import AXES, canonical_walk, divisor_chains
+
+GEMMS = [Gemm(4, 4, 4), Gemm(8, 4, 6), Gemm(12, 6, 8), Gemm(5, 7, 3),
+         Gemm(16, 8, 4), Gemm(9, 6, 12)]
+
+
+def _random_mapping(rng, gemm):
+    chains = [rng.choice(divisor_chains(d)) for d in gemm.dims]
+    return Mapping(
+        L1=tuple(c[0] for c in chains), L2=tuple(c[1] for c in chains),
+        L3=tuple(c[2] for c in chains),
+        alpha01=rng.choice(AXES), alpha12=rng.choice(AXES),
+        res1=tuple(rng.random() < 0.8 for _ in range(3)),
+        res3=tuple(rng.random() < 0.8 for _ in range(3)))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_three_way_consistency(seed):
+    rng = random.Random(seed)
+    n_exact = 0
+    for gemm in GEMMS:
+        for _ in range(40):
+            m = _random_mapping(rng, gemm)
+            cf = analytical_counts(gemm, m)
+            ref_noreuse = reference_counts(gemm, m, full_reuse=False)
+            ref_full = reference_counts(gemm, m, full_reuse=True)
+            sim = simulate_counts(gemm, m)
+            assert cf.isclose(ref_noreuse), (gemm, m)
+            assert ref_full.isclose(sim), (gemm, m)
+            if closed_form_is_exact(gemm, m):
+                n_exact += 1
+                assert cf.isclose(sim), (gemm, m)
+    assert n_exact > 20  # the predicate fires often enough to be meaningful
+
+
+def test_closed_form_is_conservative():
+    """The closed form never undercounts total energy vs full reuse."""
+    rng = random.Random(123)
+    hw = EYERISS_LIKE
+    for gemm in GEMMS:
+        for _ in range(40):
+            m = _random_mapping(rng, gemm)
+            e_cf = analytical_counts(gemm, m).energy(hw)
+            e_ref = reference_counts(gemm, m, full_reuse=True).energy(hw)
+            assert e_cf >= e_ref * (1 - 1e-9), (gemm, m)
+
+
+def test_canonical_walk_exact_on_oracle():
+    """Folding a walking-axis alias never changes the true (oracle) cost."""
+    rng = random.Random(7)
+    for gemm in GEMMS:
+        for _ in range(30):
+            m = _random_mapping(rng, gemm)
+            c = canonical_walk(gemm, m)
+            assert simulate_counts(gemm, m).isclose(
+                simulate_counts(gemm, c)), (gemm, m, c)
+
+
+def test_breakdown_matches_counts():
+    gemm = Gemm(8, 8, 8)
+    m = Mapping((4, 8, 4), (2, 4, 2), (1, 2, 1), "y", "z")
+    bd = analytical_energy(gemm, m, EYERISS_LIKE)
+    # term view and counts view agree
+    assert bd.total == pytest.approx(bd.counts.energy(EYERISS_LIKE),
+                                     rel=1e-9)
+    assert bd.volume == gemm.volume
+    assert bd.normalized > 0
+
+
+def test_rho_boundary_cases():
+    """alpha01 = z: partial sums leave SRAM exactly once per element."""
+    gemm = Gemm(8, 8, 8)
+    m = Mapping((4, 4, 4), (2, 2, 2), (1, 1, 1), "z", "z")
+    counts = analytical_counts(gemm, m)
+    sim = simulate_counts(gemm, m)
+    # DRAM writes of P == Lx*Ly (once per element, never read back)
+    assert counts.dram_write == pytest.approx(gemm.Lx * gemm.Ly)
+    assert sim.dram_write == pytest.approx(gemm.Lx * gemm.Ly)

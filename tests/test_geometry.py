@@ -1,0 +1,70 @@
+"""Unit tests: compute-grid geometry, divisor lattice, mapping encoding."""
+import pytest
+
+from repro.core.geometry import (AXES, Gemm, Mapping, canonical_walk,
+                                 divisor_chains, divisors,
+                                 enumerate_mappings, mapping_space_size,
+                                 pad_to_divisor_rich)
+
+
+def test_divisors():
+    assert divisors(12) == (1, 2, 3, 4, 6, 12)
+    assert divisors(1) == (1,)
+    assert divisors(17) == (1, 17)
+
+
+def test_divisor_chains_structure():
+    for n in (8, 12, 60):
+        chains = divisor_chains(n)
+        for l1, l2, l3 in chains:
+            assert n % l1 == 0 and l1 % l2 == 0 and l2 % l3 == 0
+        assert len(set(chains)) == len(chains)
+
+
+def test_divisor_chain_count_power_of_two():
+    # chains over 2^a: choose 0 <= i <= j <= k <= a -> C(a+3, 3)
+    import math
+    a = 5
+    expect = math.comb(a + 3, 3)
+    assert len(divisor_chains(2 ** a)) == expect
+
+
+def test_gemm_projections():
+    g = Gemm(3, 5, 7)
+    assert g.volume == 105
+    assert g.words_A == 21 and g.words_B == 35 and g.words_P == 15
+
+
+def test_mapping_validation():
+    g = Gemm(8, 8, 8)
+    m = Mapping((4, 4, 4), (2, 2, 2), (1, 1, 1), "x", "y")
+    m.validate(g)
+    bad = Mapping((3, 4, 4), (2, 2, 2), (1, 1, 1), "x", "y")
+    with pytest.raises(ValueError):
+        bad.validate(g)
+    assert m.spatial == (2, 2, 2)
+    assert m.num_pe_used == 8
+
+
+def test_mapping_space_size_counts_enumeration():
+    g = Gemm(4, 2, 2)
+    n = sum(1 for _ in enumerate_mappings(g))
+    assert n == mapping_space_size(g)
+
+
+def test_canonical_walk_folds_unit_trips():
+    g = Gemm(8, 8, 8)
+    # L1 = dims on x => stage 0-1 trip on x is 1: walking x is an alias
+    m = Mapping((8, 4, 4), (2, 2, 2), (1, 1, 1), "x", "z")
+    c = canonical_walk(g, m)
+    assert c.alpha01 != "x" or all(
+        g.dims[i] // m.L1[i] == 1 for i in range(3))
+    # non-degenerate mapping unchanged
+    m2 = Mapping((4, 4, 4), (2, 2, 2), (1, 1, 1), "y", "z")
+    assert canonical_walk(g, m2) is m2
+
+
+def test_pad_to_divisor_rich():
+    assert pad_to_divisor_rich(96) == 96  # already rich
+    p = pad_to_divisor_rich(97)
+    assert p >= 97 and len(divisors(p)) > len(divisors(97))

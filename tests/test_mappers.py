@@ -1,0 +1,55 @@
+"""Mapper suite behaviour: feasibility everywhere + GOMA dominance."""
+import pytest
+
+from repro.core import Gemm, TEMPLATES
+from repro.core.mappers import ALL_MAPPERS
+
+PAIRS = [
+    ("eyeriss-like", Gemm(1024, 2048, 2048)),
+    ("gemmini-like", Gemm(1024, 8192, 2048)),
+    ("a100-like", Gemm(1, 128256, 8192)),       # lm_head matrix-vector
+    ("tpuv1-like", Gemm(2048, 2048, 128)),       # attn-score-like
+]
+
+
+@pytest.mark.parametrize("hw_name,gemm", PAIRS,
+                         ids=[f"{h}-{g.dims}" for h, g in PAIRS])
+def test_all_mappers_feasible_and_goma_dominates(hw_name, gemm):
+    hw = TEMPLATES[hw_name]
+    results = {}
+    for name, cls in ALL_MAPPERS.items():
+        r = cls(seed=1).map(gemm, hw)
+        assert r.mapping is not None, (name, hw_name, gemm)
+        assert r.report.edp > 0
+        results[name] = r
+    best = results["goma"].edp
+    for name, r in results.items():
+        assert r.edp >= best * (1 - 1e-9), \
+            f"{name} beat GOMA: {r.edp} < {best}"
+
+
+def test_goma_certificate_attached():
+    hw = TEMPLATES["eyeriss-like"]
+    r = ALL_MAPPERS["goma"](seed=0).map(Gemm(256, 512, 128), hw)
+    cert = r.extra["certificate"]
+    assert cert.feasible and cert.gap == 0.0
+    assert "certificate" in cert.summary()
+
+
+def test_goma_eq_matches_paper_equivalence():
+    """§V-A4: under eq. 29 equality, min-E == min-EDP — the relaxed EDP
+    solver can only do as well or better."""
+    hw = TEMPLATES["a100-like"]
+    gemm = Gemm(2048, 25600, 5120)
+    r_edp = ALL_MAPPERS["goma"](seed=0).map(gemm, hw)
+    r_eq = ALL_MAPPERS["goma-eq"](seed=0).map(gemm, hw)
+    assert r_edp.edp <= r_eq.edp * (1 + 1e-9)
+
+
+def test_mappers_deterministic():
+    hw = TEMPLATES["eyeriss-like"]
+    gemm = Gemm(512, 512, 512)
+    for name in ("goma", "cosa", "factorflow", "loma"):
+        r1 = ALL_MAPPERS[name](seed=3).map(gemm, hw)
+        r2 = ALL_MAPPERS[name](seed=3).map(gemm, hw)
+        assert r1.mapping == r2.mapping, name

@@ -1,0 +1,160 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of the same family runs one forward/train step on CPU with correct output
+shapes and no NaNs; plus prefill+decode teacher-forcing consistency."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=8, with_labels=True, key=jax.random.PRNGKey(3)):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if with_labels:
+        batch["labels"] = jnp.roll(toks, -1, axis=1)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.frontend_len, cfg.d_model)) * 0.1
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.frontend_len, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch, remat=True))(params)
+    assert jnp.isfinite(loss), arch
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_decode_matches_full_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    B, S = 2, 8
+    F = cfg.frontend_len if cfg.family in ("vlm",) else 0
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S + 1), 0,
+                              cfg.vocab)
+    batch = _batch(cfg, B=B, S=S, with_labels=False)
+    batch["tokens"] = toks[:, :S]
+    logits_pre, cache = model.prefill(params, batch, max_len=F + S + 4)
+    assert logits_pre.shape == (B, 1, cfg.vocab)
+    assert jnp.all(jnp.isfinite(logits_pre))
+    logits_dec, _ = model.decode_step(
+        params, cache, toks[:, S:S + 1], jnp.asarray(F + S, jnp.int32))
+    batch2 = dict(batch)
+    batch2["tokens"] = toks
+    logits_full, _ = model.prefill(params, batch2, max_len=F + S + 8)
+    err = float(jnp.max(jnp.abs(logits_dec[:, -1] - logits_full[:, -1])))
+    assert err < 2e-4, (arch, err)
+
+
+def test_gemma2_softcaps_and_alternation_active():
+    cfg = get_config("gemma2-27b", smoke=True)
+    assert cfg.alt_local_global and cfg.window and cfg.logit_softcap
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    batch = _batch(cfg, S=16)
+    loss = model.loss(params, batch, remat=False)
+    assert jnp.isfinite(loss)
+    # logits obey the softcap bound
+    logits, _ = model.prefill(params, {"tokens": batch["tokens"]},
+                              max_len=20)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.logit_softcap + 1e-3
+
+
+def test_moe_routing_statistics():
+    cfg = get_config("deepseek-moe-16b", smoke=True)
+    from repro.models import moe as MOE
+    p = MOE.moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model))
+    y, aux = MOE.moe_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert jnp.isfinite(aux) and aux >= 1.0 - 1e-3  # >= 1 at balance
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the exact assigned dimensions."""
+    a = ARCHS
+    assert (a["rwkv6-7b"].layers, a["rwkv6-7b"].d_model,
+            a["rwkv6-7b"].d_ff, a["rwkv6-7b"].vocab) == \
+        (32, 4096, 14336, 65536)
+    assert (a["yi-34b"].layers, a["yi-34b"].d_model, a["yi-34b"].n_heads,
+            a["yi-34b"].kv_heads, a["yi-34b"].d_ff, a["yi-34b"].vocab) == \
+        (60, 7168, 56, 8, 20480, 64000)
+    assert (a["zamba2-2.7b"].layers, a["zamba2-2.7b"].d_model,
+            a["zamba2-2.7b"].ssm_state) == (54, 2560, 64)
+    assert (a["deepseek-moe-16b"].n_experts, a["deepseek-moe-16b"].top_k,
+            a["deepseek-moe-16b"].shared_experts) == (64, 6, 2)
+    assert (a["granite-moe-1b-a400m"].n_experts,
+            a["granite-moe-1b-a400m"].top_k) == (32, 8)
+    assert (a["gemma2-27b"].layers, a["gemma2-27b"].d_model,
+            a["gemma2-27b"].d_ff, a["gemma2-27b"].vocab) == \
+        (46, 4608, 36864, 256000)
+    assert (a["seamless-m4t-medium"].encoder_layers,
+            a["seamless-m4t-medium"].vocab) == (12, 256206)
+    assert (a["llama3-8b"].kv_heads, a["llama3-8b"].vocab) == (8, 128256)
+    assert (a["stablelm-1.6b"].d_ff, a["stablelm-1.6b"].vocab) == \
+        (5632, 100352)
+    assert (a["llava-next-34b"].frontend,
+            a["llava-next-34b"].d_model) == ("patches", 7168)
+
+
+def test_long_context_skip_policy():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md)."""
+    subq = {n for n, c in ARCHS.items() if c.sub_quadratic}
+    assert subq == {"rwkv6-7b", "zamba2-2.7b"}
+    for n, c in ARCHS.items():
+        names = [s.name for s in c.shapes()]
+        if n in subq:
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+            assert dict(c.skipped_shapes()).get("long_500k")
+
+
+def test_rwkv_pallas_scan_path_matches_jax():
+    """Opt-in Pallas WKV path in the model == the pure-JAX chunked path."""
+    cfg = get_config("rwkv6-7b", smoke=True).replace(ssd_chunk=8)
+    model_jax = build_model(cfg)
+    model_pl = build_model(cfg.replace(use_pallas_scan=True))
+    params = model_jax.init_params(KEY)
+    batch = _batch(cfg, S=12)
+    l1 = model_jax.loss(params, batch, remat=False)
+    l2 = model_pl.loss(params, batch, remat=False)
+    assert abs(float(l1) - float(l2)) < 1e-5
+
+
+def test_moe_gathered_dispatch_matches_dense():
+    """§Perf B3: sort-based capacity dispatch == dense one-hot dispatch
+    at ample capacity (no drops)."""
+    from repro.models import moe as MOE
+    cfg = get_config("granite-moe-1b-a400m", smoke=True)
+    p = MOE.moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model)) * 0.5
+    y_dense, _ = MOE.moe_apply(p, cfg, x)
+    y_gath, _ = MOE.moe_apply_gathered(p, cfg, x, capacity_factor=8.0)
+    assert float(jnp.max(jnp.abs(y_dense - y_gath))) < 1e-4
+    # tight capacity drops tokens but stays finite and close in norm
+    y_tight, _ = MOE.moe_apply_gathered(p, cfg, x, capacity_factor=1.0)
+    assert bool(jnp.all(jnp.isfinite(y_tight)))
+    # the config knob routes through moe_apply
+    cfg_g = cfg.replace(moe_dispatch="gathered")
+    from repro.models import build_model
+    m = build_model(cfg_g)
+    params = m.init_params(KEY)
+    loss = m.loss(params, _batch(cfg_g), remat=False)
+    assert jnp.isfinite(loss)

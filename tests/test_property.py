@@ -1,0 +1,81 @@
+"""Hypothesis property tests on the system's core invariants."""
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EYERISS_LIKE, Gemm, Mapping, analytical_counts,
+                        analytical_energy, reference_counts,
+                        simulate_counts)
+from repro.core.energy import rho_terms
+from repro.core.geometry import AXES, canonical_walk, divisor_chains
+
+
+@st.composite
+def gemm_and_mapping(draw, max_dim=16):
+    dims = tuple(draw(st.integers(1, max_dim)) for _ in range(3))
+    gemm = Gemm(*dims)
+    chains = tuple(
+        draw(st.sampled_from(divisor_chains(d))) for d in dims)
+    m = Mapping(
+        L1=tuple(c[0] for c in chains),
+        L2=tuple(c[1] for c in chains),
+        L3=tuple(c[2] for c in chains),
+        alpha01=draw(st.sampled_from(AXES)),
+        alpha12=draw(st.sampled_from(AXES)),
+        res1=tuple(draw(st.booleans()) for _ in range(3)),
+        res3=tuple(draw(st.booleans()) for _ in range(3)))
+    return gemm, m
+
+
+@settings(max_examples=150, deadline=None)
+@given(gemm_and_mapping())
+def test_counts_nonnegative_and_energy_positive(gm):
+    gemm, m = gm
+    counts = analytical_counts(gemm, m)
+    for k, v in counts.as_dict().items():
+        assert v >= -1e-9, (k, v, gemm, m)
+    assert counts.energy(EYERISS_LIKE) > 0
+    assert analytical_energy(gemm, m, EYERISS_LIKE).normalized > 0
+
+
+@settings(max_examples=150, deadline=None)
+@given(gemm_and_mapping())
+def test_rho_in_unit_interval(gm):
+    gemm, m = gm
+    rho = rho_terms(gemm, m)
+    for k in ("src1", "src3", "src4"):
+        assert 0.0 <= rho[k] < 1.0, (k, rho[k])
+
+
+@settings(max_examples=60, deadline=None)
+@given(gemm_and_mapping(max_dim=10))
+def test_reference_equals_simulator(gm):
+    """Ground-truth invariant: loop-nest analysis == literal execution."""
+    gemm, m = gm
+    assert reference_counts(gemm, m, full_reuse=True).isclose(
+        simulate_counts(gemm, m))
+
+
+@settings(max_examples=60, deadline=None)
+@given(gemm_and_mapping(max_dim=10))
+def test_closed_form_upper_bounds_true_cost(gm):
+    gemm, m = gm
+    e_cf = analytical_counts(gemm, m).energy(EYERISS_LIKE)
+    e_true = simulate_counts(gemm, m).energy(EYERISS_LIKE)
+    assert e_cf >= e_true * (1 - 1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(gemm_and_mapping(max_dim=10))
+def test_canonicalization_invariance(gm):
+    """Aliased encodings execute identically (oracle counts equal)."""
+    gemm, m = gm
+    c = canonical_walk(gemm, m)
+    assert simulate_counts(gemm, m).isclose(simulate_counts(gemm, c))
+
+
+@settings(max_examples=40, deadline=None)
+@given(gemm_and_mapping(max_dim=12), st.integers(0, 2))
+def test_macc_count_equals_volume(gm, _):
+    gemm, m = gm
+    assert analytical_counts(gemm, m).macc == gemm.volume
+    assert simulate_counts(gemm, m).macc == gemm.volume

@@ -1,0 +1,126 @@
+"""Solver correctness: brute-force optimality, certificates, constraints."""
+import numpy as np
+import pytest
+
+from repro.core import (Gemm, Mapping, TEMPLATES, solve, verify,
+                        verify_by_enumeration)
+from repro.core.certificate import check_constraints, objective_value
+from repro.core.geometry import AXES
+from repro.core.hardware import AcceleratorSpec, Ert
+from repro.core.solver import _axis_energy
+from repro.core.energy import analytical_energy
+
+ERT = Ert(dram_read=200.0, dram_write=200.0, sram_read=6.0, sram_write=6.5,
+          rf_read=1.0, rf_write=1.1, macc=2.0, sram_leak=0.1,
+          rf_leak=0.001)
+
+
+def tiny_hw(npe, sram, rf, **kw):
+    return AcceleratorSpec(name=f"tiny{npe}", sram_words=sram, rf_words=rf,
+                           num_pe=npe, ert=ERT, **kw)
+
+
+CASES = [
+    (Gemm(4, 4, 4), tiny_hw(4, 48, 6)),
+    (Gemm(4, 6, 4), tiny_hw(4, 64, 8)),
+    (Gemm(8, 4, 4), tiny_hw(4, 96, 6, allow_bypass=False)),
+    (Gemm(9, 3, 3), tiny_hw(9, 60, 9)),
+]
+
+
+@pytest.mark.parametrize("gemm,hw", CASES)
+def test_optimality_vs_enumeration(gemm, hw):
+    res = solve(gemm, hw)
+    cert = res.certificate
+    assert cert.feasible
+    assert cert.gap == 0.0
+    assert verify(cert, hw)
+    assert verify_by_enumeration(cert, hw)
+
+
+def test_edp_objective_vs_enumeration():
+    gemm, hw = Gemm(4, 4, 4), tiny_hw(4, 48, 6, spatial_equality=False)
+    res = solve(gemm, hw, objective="edp", spatial_mode="le")
+    assert verify(res.certificate, hw)
+    assert verify_by_enumeration(res.certificate, hw)
+
+
+def test_equality_infeasible_falls_back():
+    # prime dims cannot fill 4 PEs exactly
+    res = solve(Gemm(5, 7, 3), tiny_hw(4, 64, 8))
+    assert res.certificate.feasible
+    assert res.certificate.spatial_mode == "le"
+    assert verify(res.certificate, hw=tiny_hw(4, 64, 8))
+
+
+def test_fixed_spatial_mxu():
+    hw = tiny_hw(16, 4096, 64, fixed_spatial=(4, 4, 1),
+                 allow_bypass=False)
+    res = solve(Gemm(16, 16, 16), hw)
+    assert res.mapping is not None
+    assert res.mapping.spatial == (4, 4, 1)
+
+
+def test_allowed_walk01_restriction():
+    gemm, hw = Gemm(8, 8, 8), tiny_hw(4, 96, 8)
+    res = solve(gemm, hw, allowed_walk01=("z",))
+    assert res.mapping.alpha01 == "z"
+    free = solve(gemm, hw)
+    assert free.certificate.objective <= res.certificate.objective + 1e-12
+
+
+def test_vectorized_axis_energy_matches_scalar():
+    """The solver's numpy per-axis energies must equal the scalar model."""
+    import random
+    from repro.core.geometry import divisor_chains
+    rng = random.Random(0)
+    gemm = Gemm(16, 8, 12)
+    hw = tiny_hw(8, 256, 16)
+    for _ in range(80):
+        chains = [rng.choice(divisor_chains(d)) for d in gemm.dims]
+        m = Mapping(
+            L1=tuple(c[0] for c in chains), L2=tuple(c[1] for c in chains),
+            L3=tuple(c[2] for c in chains),
+            alpha01=rng.choice(AXES), alpha12=rng.choice(AXES),
+            res1=tuple(rng.random() < 0.7 for _ in range(3)),
+            res3=tuple(rng.random() < 0.7 for _ in range(3)))
+        total = 0.0
+        for i, a in enumerate(AXES):
+            g = _axis_energy(a, gemm.dim(a),
+                             np.array([m.L1[i]]), np.array([m.L2[i]]),
+                             np.array([m.L3[i]]), m.alpha01 == a,
+                             m.alpha12 == a, m.res1[i], m.res3[i], hw)
+            total += float(g[0])
+        bd = analytical_energy(gemm, m, hw)
+        assert total + bd.compute == pytest.approx(bd.normalized, rel=1e-9)
+
+
+def test_objective_value_consistency():
+    gemm, hw = Gemm(8, 8, 8), tiny_hw(4, 96, 8)
+    res = solve(gemm, hw, objective="edp", spatial_mode="le")
+    assert res.certificate.objective == pytest.approx(
+        objective_value(gemm, res.mapping, hw, "edp"), rel=1e-9)
+
+
+def test_constraints_checker():
+    gemm = Gemm(8, 8, 8)
+    hw = tiny_hw(4, 32, 4)
+    ok = Mapping((4, 4, 2), (2, 2, 1), (1, 1, 1), "x", "y")
+    assert check_constraints(gemm, ok, hw, spatial_mode="equality")
+    too_big_sram = Mapping((8, 8, 8), (2, 2, 1), (1, 1, 1), "x", "y")
+    assert not check_constraints(gemm, too_big_sram, hw,
+                                 spatial_mode="equality")
+    wrong_pe = Mapping((4, 4, 2), (2, 1, 1), (1, 1, 1), "x", "y")
+    assert not check_constraints(gemm, wrong_pe, hw,
+                                 spatial_mode="equality")
+    assert check_constraints(gemm, wrong_pe, hw, spatial_mode="le")
+
+
+def test_realistic_template_solve_and_verify():
+    """One real template x realistic GEMM: solves fast with certificate."""
+    hw = TEMPLATES["eyeriss-like"]
+    res = solve(Gemm(1024, 2048, 2048), hw)
+    cert = res.certificate
+    assert cert.feasible and cert.gap == 0.0 and verify(cert, hw)
+    assert cert.solve_time_s < 30.0
+    assert res.mapping.num_pe_used == hw.num_pe  # eq. 29 at equality

@@ -1,0 +1,68 @@
+"""Workload extraction + EDP accounting."""
+import pytest
+
+from repro.core import Gemm, Mapping, TEMPLATES, evaluate
+from repro.core.edp import EdpReport
+from repro.core.workloads import (GEMM_TYPES, LLAMA32_1B, QWEN3_32B,
+                                  arch_gemms, paper_cases, prefill_gemms)
+
+
+def test_prefill_gemm_types_and_weights():
+    gs = prefill_gemms(LLAMA32_1B, 1024)
+    types = [t for t, _, _ in gs]
+    assert types == list(GEMM_TYPES)
+    w = dict((t, w) for t, _, w in gs)
+    L, H = LLAMA32_1B.layers, LLAMA32_1B.n_heads
+    assert w["attn_q_proj"] == L
+    assert w["attn_kv_proj"] == 2 * L
+    assert w["attn_score"] == L * H
+    assert w["mlp_gate_up"] == 2 * L
+    assert w["lm_head"] == 1
+    # lm_head is matrix-vector (paper Fig. 7 discussion)
+    lm = [g for t, g, _ in gs if t == "lm_head"][0]
+    assert lm.Lx == 1 and lm.Ly == LLAMA32_1B.vocab
+
+
+def test_paper_cases_count():
+    cases = paper_cases()
+    assert len(cases) == 24
+    # 12 edge on 2 edge templates + 12 center on 2 center templates
+    assert sum("eyeriss" in c[3] or "gemmini" in c[3] for c in cases) == 12
+
+
+def test_gemm_shapes_scale_with_seq():
+    g1 = dict((t, g) for t, g, _ in prefill_gemms(QWEN3_32B, 2048))
+    g2 = dict((t, g) for t, g, _ in prefill_gemms(QWEN3_32B, 131072))
+    assert g2["attn_score"].Lx == 64 * g1["attn_score"].Lx
+    assert g2["mlp_down"].Ly == g1["mlp_down"].Ly  # N fixed
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-7b", "zamba2-2.7b",
+                                  "deepseek-moe-16b", "llama3-8b"])
+def test_arch_gemm_extraction(arch):
+    gs = arch_gemms(arch, seq=1024)
+    assert gs, arch
+    types = {t for t, _, _ in gs}
+    assert "lm_head" in types
+    if arch == "rwkv6-7b":
+        assert "attn_score" not in types      # attention-free
+        assert "rwkv_time_mix" in types
+    if arch == "zamba2-2.7b":
+        assert "ssm_in_proj" in types and "attn_score" in types
+    if arch == "deepseek-moe-16b":
+        assert "mlp_gate_up" in types
+
+
+def test_edp_report_and_aggregation():
+    hw = TEMPLATES["eyeriss-like"]
+    gemm = Gemm(64, 64, 64)
+    m = Mapping((32, 32, 32), (16, 16, 1), (1, 1, 1), "z", "z")
+    rep = evaluate(gemm, m, hw)
+    assert rep.num_pe_used == 256
+    assert rep.delay_ns == pytest.approx(
+        gemm.volume / 256 * hw.cycle_ns)
+    assert rep.edp == pytest.approx(
+        rep.energy_pj * 1e-12 * rep.delay_ns * 1e-9)
+    agg = EdpReport.aggregate([(rep, 3)])
+    assert agg.energy_pj == pytest.approx(3 * rep.energy_pj)
+    assert agg.edp == pytest.approx(3 * rep.edp)
