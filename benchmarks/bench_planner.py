@@ -1,0 +1,103 @@
+"""Plan-database benchmark: amortizing exact solves across a model.
+
+Cold build of one LlmSpec serving scenario (prefill seq sweep + decode
+steps) into a fresh store, then the identical warm run: the warm pass
+must solve 0 GEMMs (100% hit rate) and beat the cold pass by >= 10x.
+Also demonstrates (a) bit-exact plan rehydration (a cached entry equals
+an in-process re-solve, mapping and certified objective), and (b) warm
+starting: planning a *second* model against the now-populated store
+seeds branch-and-bound with near-neighbor incumbents while keeping every
+certificate at zero gap.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+from common import Timer, emit, write_json
+
+from repro.core import Gemm, TEMPLATES, solve
+from repro.core.workloads import LLAMA32_1B, QWEN3_0_6B
+from repro.planner import BatchPlanner, PlanStore
+
+HW = "gemmini-like"
+PREFILL_SEQS = (1024, 4096)
+DECODE_BATCHES = (8,)
+CACHE_LEN = 4096
+
+
+def run(jobs: int = 0) -> dict:
+    hw = TEMPLATES[HW]
+    root = tempfile.mkdtemp(prefix="goma_plandb_")
+    out: dict = {"hw": HW, "model": LLAMA32_1B.name,
+                 "prefill_seqs": PREFILL_SEQS,
+                 "decode_batches": DECODE_BATCHES}
+    try:
+        store = PlanStore(root)
+        planner = BatchPlanner(store, jobs=jobs)
+
+        with Timer() as t_cold:
+            man_cold = planner.plan_model(
+                LLAMA32_1B, hw, prefill_seqs=PREFILL_SEQS,
+                decode_batches=DECODE_BATCHES, cache_len=CACHE_LEN)
+        rep_cold = planner.last_report
+
+        with Timer() as t_warm:
+            man_warm = planner.plan_model(
+                LLAMA32_1B, hw, prefill_seqs=PREFILL_SEQS,
+                decode_batches=DECODE_BATCHES, cache_len=CACHE_LEN)
+        rep_warm = planner.last_report
+
+        speedup = t_cold.dt / max(t_warm.dt, 1e-9)
+        assert rep_warm.solved == 0, rep_warm
+        assert rep_warm.hit_rate == 1.0, rep_warm
+        assert speedup >= 10.0, (t_cold.dt, t_warm.dt)
+        assert [e.objective for e in man_warm.entries] == \
+               [e.objective for e in man_cold.entries]
+
+        # bit-exact rehydration: cached entry == fresh in-process solve
+        sample = next(e for e in store.entries() if e.feasible)
+        res = solve(Gemm(*sample.gemm_dims), sample.hw,
+                    objective=sample.objective_kind)
+        assert res.mapping == sample.mapping
+        assert res.certificate.objective == sample.certificate.objective
+
+        # warm-started cross-model planning keeps zero-gap certificates
+        with Timer() as t_x:
+            planner.plan_model(QWEN3_0_6B, hw, prefill_seqs=(1024,),
+                               cache_len=CACHE_LEN)
+        rep_x = planner.last_report
+        gaps_ok = all(e.certificate.upper_bound == e.certificate.lower_bound
+                      for e in store.entries() if e.feasible)
+        assert gaps_ok
+
+        emit("planner[cold_build]", t_cold.dt * 1e6,
+             f"gemms={rep_cold.total_gemms} unique={rep_cold.unique_gemms} "
+             f"solved={rep_cold.solved} t={t_cold.dt:.3f}s")
+        emit("planner[warm_build]", t_warm.dt * 1e6,
+             f"hit_rate={rep_warm.hit_rate:.0%} solved={rep_warm.solved} "
+             f"t={t_warm.dt:.4f}s speedup={speedup:.1f}x")
+        emit("planner[warm_start_xmodel]", t_x.dt * 1e6,
+             f"{QWEN3_0_6B.name}: solved={rep_x.solved} "
+             f"warm_started={rep_x.warm_started} zero_gap={gaps_ok}")
+        out.update({
+            "cold_s": t_cold.dt, "warm_s": t_warm.dt, "speedup": speedup,
+            "unique_gemms": rep_cold.unique_gemms,
+            "warm_hit_rate": rep_warm.hit_rate,
+            "xmodel_warm_started": rep_x.warm_started,
+            "xmodel_solved": rep_x.solved,
+            "store_entries": len(store),
+        })
+        write_json("planner", out)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+if __name__ == "__main__":
+    t0 = time.perf_counter()
+    res = run()
+    print(f"done in {time.perf_counter() - t0:.1f}s: "
+          f"speedup={res['speedup']:.1f}x "
+          f"hit_rate={res['warm_hit_rate']:.0%}")

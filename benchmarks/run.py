@@ -14,6 +14,8 @@ Suites:
   dataflow   beyond-paper: taxonomy of GOMA's optimal mappings
   kernels    Pallas goma_gemm vs jnp oracle (interpret mode)
   roofline   dry-run-derived roofline terms (EXPERIMENTS.md §Roofline)
+  planner    plan-database cold/warm builds + warm starts
+             (EXPERIMENTS.md §Planner)
 """
 from __future__ import annotations
 
@@ -77,6 +79,9 @@ def main() -> None:
             bench_kernels = None
         if bench_kernels is not None:
             guarded("kernels", bench_kernels.run)
+    if on("planner"):
+        import bench_planner
+        guarded("planner", lambda: bench_planner.run())
     if on("roofline"):
         try:
             import bench_roofline

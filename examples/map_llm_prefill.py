@@ -1,7 +1,11 @@
 """Map a whole LLM prefill onto an accelerator: per-layer EDP report.
 
     PYTHONPATH=src python examples/map_llm_prefill.py [--model llama-3.2-1b]
-        [--seq 1024] [--hw eyeriss-like]
+        [--seq 1024] [--hw eyeriss-like] [--plan-db /tmp/plans]
+
+With --plan-db, solves are read-through cached in the GOMA plan database:
+a second run of the same command solves nothing (see `python -m
+repro.plan` for batch prebuilds).
 """
 import argparse
 import pathlib
@@ -23,16 +27,25 @@ def main():
     ap.add_argument("--model", default="llama-3.2-1b", choices=MODELS)
     ap.add_argument("--seq", type=int, default=1024)
     ap.add_argument("--hw", default="eyeriss-like", choices=TEMPLATES)
+    ap.add_argument("--plan-db", default=None,
+                    help="cache solves in this GOMA plan database dir")
     args = ap.parse_args()
 
     spec = MODELS[args.model]
     hw = TEMPLATES[args.hw]
+    store = None
+    if args.plan_db:
+        from repro.planner import PlanStore, cached_solve
+        store = PlanStore(args.plan_db)
     print(f"{spec.name} prefill @ {args.seq} tokens on {hw.name}")
     print(f"{'gemm type':14s} {'(M,N,K)':>24s} {'w':>5s} "
           f"{'Ē pJ/MAC':>9s} {'EDP J*s':>11s} {'solve s':>8s}")
     parts = []
     for gtype, gemm, w in prefill_gemms(spec, args.seq):
-        res = solve(gemm, hw)
+        if store is not None:
+            res = cached_solve(gemm, hw, store=store, warm_start=True)
+        else:
+            res = solve(gemm, hw)
         rep = evaluate(gemm, res.mapping, hw)
         parts.append((rep, w))
         print(f"{gtype:14s} {str(gemm.dims):>24s} {w:>5d} "
@@ -41,6 +54,8 @@ def main():
     case = EdpReport.aggregate(parts)
     print(f"\ncase total (occurrence-weighted, eq. 35): "
           f"E={case.energy_pj:.4g} pJ  EDP={case.edp:.4g} J*s")
+    if store is not None:
+        print(f"plan db: {store.stats()}")
 
 
 if __name__ == "__main__":

@@ -57,6 +57,7 @@ class Certificate:
     spatial_mode: str             # "equality" | "le" | "fixed"
     feasible: bool
     objective_kind: str = "energy"
+    warm_started: bool = False    # branch-and-bound seeded with a cached UB
 
     @property
     def gap(self) -> float:

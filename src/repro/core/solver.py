@@ -41,6 +41,11 @@ from .hardware import AcceleratorSpec
 
 _EPS = 1e-12
 
+# Bumped whenever the search/objective semantics change; part of the
+# planner's content-addressed plan-store key, so stale on-disk plans are
+# never served for a newer solver (planner/store.py).
+SOLVER_VERSION = "goma-bb-1"
+
 
 @dataclasses.dataclass
 class _AxisCands:
@@ -110,7 +115,8 @@ class SolveResult:
 def solve(gemm: Gemm, hw: AcceleratorSpec, *,
           objective: str = "energy",
           spatial_mode: str | None = None,
-          allowed_walk01: tuple[str, ...] | None = None) -> SolveResult:
+          allowed_walk01: tuple[str, ...] | None = None,
+          incumbent: float | None = None) -> SolveResult:
     """Globally optimal mapping for (gemm, hw) with certificate.
 
     objective: "energy" (paper default) or "edp".
@@ -119,6 +125,12 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
     allowed_walk01: optionally restrict the stage 0-1 walking axis (used
     by the TPU adapter, where a non-z outer walk with partial reduction
     would imply partial-sum HBM traffic Pallas cannot express).
+    incumbent: optional initial upper bound seeding branch-and-bound (the
+    planner's warm start from a cached near-neighbor plan).  Soundness is
+    unconditional: the incumbent only prunes, so if it lies at or below
+    the true optimum no feasible state survives and we transparently
+    re-solve cold; when a state *is* found every pruned node had a
+    provable LB >= the final UB, so the zero-gap certificate is intact.
     """
     t0 = time.perf_counter()
     requested_mode = spatial_mode
@@ -187,7 +199,14 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
     # all V/num_pe_used cycles (eq. 30); it depends on the spatial product,
     # so it lives inside the objective whenever num_pe_used is free.
     leak_cycle = hw.ert.sram_leak + hw.ert.rf_leak * npe
-    best = np.inf
+    if incumbent is not None and np.isfinite(incumbent):
+        # Seed with a hair of slack so a mapping matching the incumbent
+        # exactly (e.g. re-planning a shape whose optimum equals the
+        # neighbor's) is still discovered rather than pruned.
+        best = float(incumbent) * (1.0 + 1e-9) + 1e-9
+    else:
+        incumbent = None
+        best = np.inf
     best_state: tuple | None = None
     nodes = pruned = combos_skipped = 0
 
@@ -292,6 +311,13 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
     space = mapping_space_size(gemm, search_bypass=hw.allow_bypass)
 
     if best_state is None:
+        if incumbent is not None:
+            # The warm-start UB pruned everything: either the instance is
+            # infeasible or its optimum exceeds the neighbor's objective.
+            # Re-solve cold — exactness never depends on the incumbent.
+            return solve(gemm, hw, objective=objective,
+                         spatial_mode=requested_mode,
+                         allowed_walk01=allowed_walk01)
         if spatial_mode == "equality" and requested_mode is None:
             # eq. 29 infeasible for this (gemm, hw): documented fallback
             return solve(gemm, hw, objective="edp", spatial_mode="le",
@@ -318,7 +344,8 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
                        nodes_pruned=pruned, combos_skipped=combos_skipped,
                        space_size=space, solve_time_s=elapsed,
                        spatial_mode=spatial_mode, feasible=True,
-                       objective_kind=objective)
+                       objective_kind=objective,
+                       warm_started=incumbent is not None)
     assert check_constraints(gemm, m, hw, spatial_mode=(
         "equality" if spatial_mode == "fixed" else spatial_mode))
     return SolveResult(mapping=m, certificate=cert, breakdown=bd)

@@ -18,12 +18,58 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 
-from .geometry import Gemm
+from .geometry import Gemm, Mapping
 from .hardware import TPUV5E_LIKE, AcceleratorSpec
-from .solver import solve
+from .solver import SolveResult, solve
 
 MXU = 128
+
+# --- plan-store read-through ------------------------------------------------
+# When a plan store is installed (explicitly via set_plan_store or through
+# the GOMA_PLAN_DB env var), every tiling solve first consults the
+# database; misses are solved once and written back, so a fleet of
+# processes sharing one store converges to zero inline solves.
+_PLAN_STORE = None
+_PLAN_STORE_RESOLVED = False
+
+
+def set_plan_store(store) -> None:
+    """Install (or clear, with None) the process-wide plan store.
+
+    Changing to a *different* store flushes the in-process plan cache so
+    future lookups are served through (and recorded in) the new store;
+    re-installing the current store keeps the warm cache."""
+    global _PLAN_STORE, _PLAN_STORE_RESOLVED
+    changed = store is not _PLAN_STORE
+    _PLAN_STORE = store
+    _PLAN_STORE_RESOLVED = True
+    if changed:
+        plan_gemm_tiling.cache_clear()
+
+
+def get_plan_store():
+    """The installed store, lazily resolved from $GOMA_PLAN_DB once."""
+    global _PLAN_STORE, _PLAN_STORE_RESOLVED
+    if not _PLAN_STORE_RESOLVED:
+        _PLAN_STORE_RESOLVED = True
+        if os.environ.get("GOMA_PLAN_DB", "").strip():
+            from ..planner.store import resolve_default_store
+            _PLAN_STORE = resolve_default_store()
+    return _PLAN_STORE
+
+
+def _tpu_solve(gemm: Gemm, hw: AcceleratorSpec,
+               allowed_walk01: tuple[str, ...] | None) -> SolveResult:
+    store = get_plan_store()
+    if store is not None:
+        from ..planner.batch import cached_solve
+        return cached_solve(gemm, hw, objective="energy",
+                            allowed_walk01=allowed_walk01, store=store,
+                            warm_start=True)
+    return solve(gemm, hw, objective="energy",
+                 allowed_walk01=allowed_walk01)
 
 
 def _pad_to(n: int, mult: int) -> int:
@@ -63,26 +109,22 @@ def tpu_spec(dtype_bytes: int = 2,
     )
 
 
-@functools.lru_cache(maxsize=512)
-def plan_gemm_tiling(M: int, N: int, K: int,
-                     *, dtype_bytes: int = 2) -> TpuTilePlan:
-    """GOMA-optimal (bm, bn, bk) + grid order for a (possibly padded) GEMM.
-
-    Dims are padded so M, N are MXU multiples and every padded dim is a
-    power-of-two-rich size (the divisor lattice of the padded dims is the
-    Pallas-legal tile set)."""
+def tpu_problem(M: int, N: int, K: int, *, dtype_bytes: int = 2
+                ) -> tuple[Gemm, AcceleratorSpec, tuple[int, int, int]]:
+    """The (padded Gemm, spec, padded dims) GOMA instance of a TPU GEMM —
+    the identity under which plans are stored and looked up."""
     pm, pn = _pad_to(M, MXU), _pad_to(N, MXU)
     pk = _pad_to(K, MXU) if K >= MXU else K
     hw = tpu_spec(dtype_bytes)
-    gemm = Gemm(pm, pn, pk, f"tpu_{M}x{N}x{K}")
-    res = solve(gemm, hw, objective="energy")
-    m = res.mapping
-    if m is None:
-        raise ValueError(f"no feasible TPU mapping for {gemm}")
-    if m.alpha01 != "z" and m.L1[2] < pk:
-        # partial-sum HBM traffic not expressible in one pallas_call
-        res = solve(gemm, hw, objective="energy", allowed_walk01=("z",))
-        m = res.mapping
+    return Gemm(pm, pn, pk, f"tpu_{M}x{N}x{K}"), hw, (pm, pn, pk)
+
+
+def plan_from_mapping(M: int, N: int, K: int,
+                      padded: tuple[int, int, int], m: Mapping, *,
+                      objective: float = float("nan"),
+                      solve_time_s: float = 0.0) -> TpuTilePlan:
+    """Materialize a TpuTilePlan from an (already solved) mapping — the
+    path by which cached/manifest plans skip the solver entirely."""
     bm, bn, bk = m.L1
     # pallas grid order: GOMA's walking axis is the innermost grid dim
     axis_of = {"x": "m", "y": "n", "z": "k"}
@@ -90,8 +132,31 @@ def plan_gemm_tiling(M: int, N: int, K: int,
     order = [g for g in ("m", "n", "k") if g != inner] + [inner]
     # degenerate dims drop out of the grid ordering naturally (size-1 dims
     # stay; pallas handles trip-1 grid entries)
-    return TpuTilePlan(M=M, N=N, K=K, padded=(pm, pn, pk),
+    return TpuTilePlan(M=M, N=N, K=K, padded=padded,
                        block=(bm, bn, bk), grid_order=tuple(order),
-                       walk=m.alpha01,
-                       objective=res.certificate.objective,
-                       solve_time_s=res.certificate.solve_time_s)
+                       walk=m.alpha01, objective=objective,
+                       solve_time_s=solve_time_s)
+
+
+@functools.lru_cache(maxsize=512)
+def plan_gemm_tiling(M: int, N: int, K: int,
+                     *, dtype_bytes: int = 2) -> TpuTilePlan:
+    """GOMA-optimal (bm, bn, bk) + grid order for a (possibly padded) GEMM.
+
+    Dims are padded so M, N are MXU multiples and every padded dim is a
+    power-of-two-rich size (the divisor lattice of the padded dims is the
+    Pallas-legal tile set).  With a plan store installed the solve is
+    read-through cached across processes (see set_plan_store)."""
+    gemm, hw, padded = tpu_problem(M, N, K, dtype_bytes=dtype_bytes)
+    pk = padded[2]
+    res = _tpu_solve(gemm, hw, None)
+    m = res.mapping
+    if m is None:
+        raise ValueError(f"no feasible TPU mapping for {gemm}")
+    if m.alpha01 != "z" and m.L1[2] < pk:
+        # partial-sum HBM traffic not expressible in one pallas_call
+        res = _tpu_solve(gemm, hw, ("z",))
+        m = res.mapping
+    return plan_from_mapping(M, N, K, padded, m,
+                             objective=res.certificate.objective,
+                             solve_time_s=res.certificate.solve_time_s)

@@ -10,6 +10,7 @@ plan them too (DESIGN.md §Arch-applicability).
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from .geometry import Gemm
 
@@ -92,6 +93,59 @@ def prefill_gemms(spec: LlmSpec, seq: int) -> list[tuple[str, Gemm, int]]:
     return out
 
 
+def decode_gemms(spec: LlmSpec, batch: int,
+                 cache_len: int) -> list[tuple[str, Gemm, int]]:
+    """GEMM instances of one batched decode step (serving traffic shape).
+
+    One new token per sequence: every projection collapses to M = batch
+    rows, and the attention score/context GEMMs run against the KV cache
+    (y resp. z extent = cache_len).  These are the shapes a serving engine
+    re-plans on every deployment — the planner's bread and butter.
+    """
+    L, H, KV, hd = spec.layers, spec.n_heads, spec.kv_heads, spec.head_dim
+    d, ff, vocab = spec.d_model, spec.d_ff, spec.vocab
+    ctx = cache_len
+    if spec.window is not None and spec.local_ratio >= 1.0:
+        ctx = min(cache_len, spec.window)
+    out: list[tuple[str, Gemm, int]] = [
+        ("attn_q_proj", Gemm(batch, H * hd, d, "attn_q_proj"), L),
+        ("attn_kv_proj", Gemm(batch, KV * hd, d, "attn_kv_proj"), 2 * L),
+        ("attn_score", Gemm(batch, ctx, hd, "attn_score"), L * H),
+        ("attn_context", Gemm(batch, hd, ctx, "attn_context"), L * H),
+        ("attn_output", Gemm(batch, d, H * hd, "attn_output"), L),
+    ]
+    if spec.n_experts:
+        m_exp = max(1, batch * spec.top_k // spec.n_experts)
+        n_mats = spec.n_experts + spec.shared_experts
+        out += [
+            ("mlp_gate_up", Gemm(m_exp, ff, d, "mlp_gate_up"), 2 * L * n_mats),
+            ("mlp_down", Gemm(m_exp, d, ff, "mlp_down"), L * n_mats),
+        ]
+    else:
+        out += [
+            ("mlp_gate_up", Gemm(batch, ff, d, "mlp_gate_up"), 2 * L),
+            ("mlp_down", Gemm(batch, d, ff, "mlp_down"), L),
+        ]
+    out.append(("lm_head", Gemm(batch, vocab, d, "lm_head"), 1))
+    return out
+
+
+def scenario_gemms(spec: LlmSpec, *, prefill_seqs: Sequence[int] = (),
+                   decode_batches: Sequence[int] = (),
+                   cache_len: int = 4096) -> list[tuple[str, Gemm, int]]:
+    """A whole serving scenario: prefill seq sweep + decode step shapes.
+
+    Returns the concatenated (type, Gemm, weight) list; duplicate shapes
+    across phases are expected — the planner deduplicates by plan key.
+    """
+    out: list[tuple[str, Gemm, int]] = []
+    for seq in prefill_seqs:
+        out.extend(prefill_gemms(spec, seq))
+    for batch in decode_batches:
+        out.extend(decode_gemms(spec, batch, cache_len))
+    return out
+
+
 def paper_cases() -> list[tuple[str, LlmSpec, int, str]]:
     """The 24 evaluation cases: (case_name, model, seq, hw_template)."""
     from .hardware import CENTER_TEMPLATES, EDGE_TEMPLATES
@@ -163,4 +217,66 @@ def arch_gemms(arch_id: str, seq: int = 4096,
             ("mlp_down", Gemm(m, d, cfg.d_ff, "mlp_down"), n_mlp),
         ]
     out.append(("lm_head", Gemm(1, cfg.vocab, d, "lm_head"), 1))
+    return out
+
+
+def arch_decode_gemms(arch_id: str, batch: int = 1,
+                      cache_len: int = 4096) -> list[tuple[str, Gemm, int]]:
+    """Decode-step GEMM extraction for the repo's architectures.
+
+    Mirrors `arch_gemms` with M collapsed to the batch size (one token
+    per sequence) and attention score/context run against the KV cache.
+    Recurrent families (RWKV6, Mamba2) keep only their projections — the
+    per-step state update is not a GEMM.
+    """
+    from ..configs import get_config
+    cfg = get_config(arch_id)
+    b, d = batch, cfg.d_model
+    out: list[tuple[str, Gemm, int]] = []
+    n_attn = cfg.attention_layer_count()
+    if n_attn:
+        H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+        ctx = cache_len
+        if cfg.window is not None and cfg.attn_every == 0 and \
+                not cfg.alt_local_global:
+            ctx = min(cache_len, cfg.window)
+        out += [
+            ("attn_q_proj", Gemm(b, H * hd, d, "attn_q_proj"), n_attn),
+            ("attn_kv_proj", Gemm(b, KV * hd, d, "attn_kv_proj"), 2 * n_attn),
+            ("attn_score", Gemm(b, ctx, hd, "attn_score"), n_attn * H),
+            ("attn_context", Gemm(b, hd, ctx, "attn_context"), n_attn * H),
+            ("attn_output", Gemm(b, d, H * hd, "attn_output"), n_attn),
+        ]
+    n_ssm = cfg.ssm_layer_count()
+    if n_ssm:
+        inner = cfg.ssm_inner_dim()
+        out += [
+            ("ssm_in_proj", Gemm(b, 2 * inner, d, "ssm_in_proj"), n_ssm),
+            ("ssm_out_proj", Gemm(b, d, inner, "ssm_out_proj"), n_ssm),
+        ]
+    n_rwkv = cfg.rwkv_layer_count()
+    if n_rwkv:
+        out += [
+            ("rwkv_time_mix", Gemm(b, d, d, "rwkv_time_mix"), 4 * n_rwkv),
+            ("rwkv_channel_mix", Gemm(b, cfg.d_ff, d, "rwkv_channel_mix"),
+             n_rwkv),
+            ("rwkv_channel_out", Gemm(b, d, cfg.d_ff, "rwkv_channel_out"),
+             n_rwkv),
+        ]
+    if cfg.n_experts:
+        m_exp = max(1, b * cfg.top_k // cfg.n_experts)
+        n_mats = cfg.n_experts + cfg.shared_experts
+        out += [
+            ("mlp_gate_up", Gemm(m_exp, cfg.d_ff, d, "mlp_gate_up"),
+             2 * cfg.layers * n_mats),
+            ("mlp_down", Gemm(m_exp, d, cfg.d_ff, "mlp_down"),
+             cfg.layers * n_mats),
+        ]
+    elif not n_rwkv and cfg.d_ff:
+        n_mlp = cfg.mlp_layer_count()
+        out += [
+            ("mlp_gate_up", Gemm(b, cfg.d_ff, d, "mlp_gate_up"), 2 * n_mlp),
+            ("mlp_down", Gemm(b, d, cfg.d_ff, "mlp_down"), n_mlp),
+        ]
+    out.append(("lm_head", Gemm(b, cfg.vocab, d, "lm_head"), 1))
     return out

@@ -21,17 +21,26 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "force_xla"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "force_xla", "plan"))
 def gemm(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool | None = None,
-         force_xla: bool = False) -> jnp.ndarray:
-    """C[M,N] = A[M,K] @ B[K,N] through the GOMA-planned Pallas kernel."""
+         force_xla: bool = False, plan=None) -> jnp.ndarray:
+    """C[M,N] = A[M,K] @ B[K,N] through the GOMA-planned Pallas kernel.
+
+    ``plan``: an explicit TpuTilePlan (e.g. rehydrated from a plan store
+    or ModelMappingManifest via ``planner.tile_plan_from_store``) — skips
+    the in-process planner entirely.  Default: ``plan_gemm_tiling``,
+    which itself reads through the plan database when one is installed.
+    """
     if force_xla:
         return matmul_ref(a, b)
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
-    plan = plan_gemm_tiling(M, N, K,
-                            dtype_bytes=jnp.dtype(a.dtype).itemsize)
+    if plan is None:
+        plan = plan_gemm_tiling(M, N, K,
+                                dtype_bytes=jnp.dtype(a.dtype).itemsize)
+    assert (plan.M, plan.N, plan.K) == (M, N, K), (plan, (M, N, K))
     pm, pn, pk = plan.padded
     a_p = jnp.pad(a, ((0, pm - M), (0, pk - K)))
     b_p = jnp.pad(b, ((0, pk - K), (0, pn - N)))

@@ -22,14 +22,28 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan-db", default=None,
+                    help="GOMA plan database dir: prewarm kernel tilings "
+                         "through the store (also: $GOMA_PLAN_DB)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
+    store = None
+    if args.plan_db:
+        from repro.planner import PlanStore
+        store = PlanStore(args.plan_db)
     eng = Engine(model, params, ServeConfig(
         max_new_tokens=args.new_tokens, temperature=args.temperature,
-        cache_len=args.prompt_len + args.new_tokens + 8))
+        cache_len=args.prompt_len + args.new_tokens + 8),
+        plan_store=store)
+    if store is not None:
+        import time as _t
+        t0 = _t.perf_counter()
+        n = eng.prewarm_plans(args.arch, args.batch, args.prompt_len)
+        print(f"plan prewarm: {n} GEMM tilings in "
+              f"{_t.perf_counter() - t0:.2f}s  store={store.stats()}")
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab,

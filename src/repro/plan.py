@@ -1,0 +1,7 @@
+"""CLI entry point: ``python -m repro.plan`` (see planner/cli.py)."""
+import sys
+
+from .planner.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

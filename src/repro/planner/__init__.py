@@ -1,0 +1,32 @@
+"""Mapping-plan database: amortize exact GOMA solves across models.
+
+The solver in ``core.solver`` proves a globally optimal mapping for one
+(GEMM, accelerator) pair; a real model emits hundreds of distinct GEMM
+shapes across prefill sequence sweeps and decode steps, and a serving
+fleet re-plans the same shapes forever.  This subsystem turns the solver
+from a library function into a service-shaped component:
+
+  * ``store``     — content-addressed, versioned on-disk plan store
+                    (JSON ``Mapping`` + ``Certificate``, keyed by a stable
+                    hash of (Gemm, AcceleratorSpec, solver version,
+                    objective, walk restrictions)),
+  * ``batch``     — whole-model GEMM extraction + deduplicated parallel
+                    batch solving with near-neighbor warm starts,
+  * ``manifest``  — the ``ModelMappingManifest`` build artifact,
+  * ``cli``       — ``python -m repro.plan`` prebuild/inspect/verify.
+
+Read-through consumers: ``core.tpu_mapping.plan_gemm_tiling`` (hence
+``kernels.ops.gemm`` / ``kernels.goma_gemm``) and ``serving.Engine``
+(plan prewarming).  See DESIGN.md §Planner.
+"""
+from .batch import (BatchPlanner, BatchReport, cached_solve,
+                    prewarm_tpu_plans, tile_plan_from_store)
+from .manifest import ManifestEntry, ModelMappingManifest
+from .store import (PlanEntry, PlanKey, PlanStore, plan_key,
+                    resolve_default_store)
+
+__all__ = [
+    "BatchPlanner", "BatchReport", "ManifestEntry", "ModelMappingManifest",
+    "PlanEntry", "PlanKey", "PlanStore", "cached_solve", "plan_key",
+    "prewarm_tpu_plans", "resolve_default_store", "tile_plan_from_store",
+]

@@ -1,0 +1,316 @@
+"""Batch planner: whole-model GEMM extraction, dedup, parallel solving.
+
+Turns a model scenario (prefill sequence sweep + decode step shapes) into
+a populated plan store and a ``ModelMappingManifest``:
+
+  1. extract every (type, Gemm, weight) via ``core.workloads``;
+  2. deduplicate by content-addressed plan key (a prefill sweep of one
+     model collapses to a handful of distinct shapes per seq);
+  3. serve hits from the store; solve misses in parallel with a process
+     pool, optionally warm-starting branch-and-bound with the best cached
+     near-neighbor objective as the initial incumbent UB (sound: the
+     solver re-solves cold if the incumbent over-prunes, see
+     ``core.solver.solve``);
+  4. write every fresh solve back and emit the manifest artifact.
+
+Also hosts the read-through primitives consumed by ``core.tpu_mapping``
+and ``serving.Engine``: ``cached_solve`` (store-backed ``solve``),
+``prewarm_tpu_plans`` and ``tile_plan_from_store`` (manifest/store-driven
+Pallas tile plans with zero solver invocations).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import multiprocessing
+import os
+import time
+from typing import Iterable, Sequence
+
+from ..core.certificate import check_constraints, objective_value
+from ..core.energy import analytical_energy
+from ..core.geometry import Gemm
+from ..core.hardware import AcceleratorSpec
+from ..core.solver import SOLVER_VERSION, SolveResult, solve
+from ..core.workloads import LlmSpec, scenario_gemms
+from .manifest import ManifestEntry, ModelMappingManifest
+from .store import PlanEntry, PlanKey, PlanStore, plan_key
+
+
+def _effective_mode(hw: AcceleratorSpec, spatial_mode: str | None) -> str:
+    if hw.fixed_spatial is not None:
+        return "equality"          # check_constraints matches fixed_spatial
+    if spatial_mode is not None:
+        return spatial_mode
+    return "equality" if hw.spatial_equality else "le"
+
+
+def warm_incumbent(gemm: Gemm, hw: AcceleratorSpec, key: PlanKey,
+                   store: PlanStore) -> float | None:
+    """Initial branch-and-bound UB from the best cached near-neighbor.
+
+    Preferred: transplant the neighbor's *mapping* — when it is feasible
+    for the new GEMM its re-evaluated objective is a guaranteed-valid UB.
+    Fallback: the neighbor's raw objective as a speculative UB (the solver
+    re-solves cold if it over-prunes, so exactness is never at risk).
+    """
+    nb = store.nearest_neighbor(key)
+    if nb is None or nb.mapping is None:
+        return None
+    mode = _effective_mode(hw, key.spatial_mode)
+    try:
+        if check_constraints(gemm, nb.mapping, hw, spatial_mode=mode):
+            return objective_value(gemm, nb.mapping, hw, key.objective)
+    except (ValueError, KeyError):
+        pass
+    return float(nb.certificate.objective)
+
+
+def result_from_entry(entry: PlanEntry, gemm: Gemm,
+                      hw: AcceleratorSpec) -> SolveResult:
+    """Rehydrate a cached solve; the certificate round-trips bit-exactly,
+    the energy breakdown is recomputed (cheap closed form)."""
+    bd = (analytical_energy(gemm, entry.mapping, hw)
+          if entry.mapping is not None else None)
+    return SolveResult(mapping=entry.mapping,
+                       certificate=entry.certificate, breakdown=bd)
+
+
+def cached_solve(gemm: Gemm, hw: AcceleratorSpec, *,
+                 objective: str = "energy",
+                 spatial_mode: str | None = None,
+                 allowed_walk01: tuple[str, ...] | None = None,
+                 store: PlanStore | None = None,
+                 warm_start: bool = False) -> SolveResult:
+    """Read-through ``core.solver.solve``: store hit -> no solve; miss ->
+    solve (optionally warm-started) and write back."""
+    if store is None:
+        return solve(gemm, hw, objective=objective,
+                     spatial_mode=spatial_mode,
+                     allowed_walk01=allowed_walk01)
+    key = plan_key(gemm, hw, objective=objective, spatial_mode=spatial_mode,
+                   allowed_walk01=allowed_walk01)
+    entry = store.get(key)
+    if entry is not None:
+        return result_from_entry(entry, gemm, hw)
+    incumbent = warm_incumbent(gemm, hw, key, store) if warm_start else None
+    res = solve(gemm, hw, objective=objective, spatial_mode=spatial_mode,
+                allowed_walk01=allowed_walk01, incumbent=incumbent)
+    store.put(PlanEntry.from_solve(key, res.certificate, hw))
+    return res
+
+
+# ---------------------------------------------------------------------------
+# parallel batch solving
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _SolveTask:
+    """Picklable unit of work for the process pool."""
+
+    digest: str
+    gemm: Gemm
+    hw: AcceleratorSpec
+    objective: str
+    spatial_mode: str | None
+    allowed_walk01: tuple[str, ...] | None
+    incumbent: float | None
+
+
+def _solve_task(task: _SolveTask) -> tuple[str, "object"]:
+    res = solve(task.gemm, task.hw, objective=task.objective,
+                spatial_mode=task.spatial_mode,
+                allowed_walk01=task.allowed_walk01,
+                incumbent=task.incumbent)
+    return task.digest, res.certificate
+
+
+def solve_many(tasks: Sequence[_SolveTask], *,
+               jobs: int | None = None) -> dict[str, "object"]:
+    """Solve a batch of deduplicated tasks, in-process or via a pool.
+
+    Returns {digest: Certificate}.  jobs None/0 -> os.cpu_count(); 1 ->
+    sequential in-process (identical results by construction: each task
+    is an independent exact solve).
+    """
+    if jobs is None or jobs <= 0:
+        jobs = os.cpu_count() or 1
+    if jobs == 1 or len(tasks) <= 1:
+        return dict(_solve_task(t) for t in tasks)
+    out: dict[str, object] = {}
+    # spawn, not fork: the parent typically has jax (multithreaded)
+    # loaded; workers only ever import numpy-level repro.core
+    ctx = multiprocessing.get_context("spawn")
+    with concurrent.futures.ProcessPoolExecutor(max_workers=jobs,
+                                                mp_context=ctx) as pool:
+        for digest, cert in pool.map(_solve_task, tasks):
+            out[digest] = cert
+    return out
+
+
+@dataclasses.dataclass
+class BatchReport:
+    """Outcome of one BatchPlanner run (bench_planner's measurable)."""
+
+    total_gemms: int              # (type, gemm, weight) rows pre-dedup
+    unique_gemms: int
+    hits: int
+    solved: int
+    warm_started: int
+    wall_time_s: float
+    solve_time_s: float           # sum of per-solve times (CPU work)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.unique_gemms if self.unique_gemms else 0.0
+
+
+class BatchPlanner:
+    """Plans whole models/scenarios against one accelerator spec."""
+
+    def __init__(self, store: PlanStore, *, jobs: int | None = 1,
+                 warm_start: bool = True):
+        self.store = store
+        self.jobs = jobs
+        self.warm_start = warm_start
+        self.last_report: BatchReport | None = None
+
+    def plan_gemms(self, gemms: Iterable[tuple[str, Gemm, int]],
+                   hw: AcceleratorSpec, *, objective: str = "energy",
+                   spatial_mode: str | None = None,
+                   allowed_walk01: tuple[str, ...] | None = None,
+                   ) -> list[ManifestEntry]:
+        """Dedup -> hit/miss split -> parallel solve -> write-back."""
+        t0 = time.perf_counter()
+        rows = list(gemms)
+        # aggregate weights of identical shapes, keep first-seen type name
+        by_digest: dict[str, dict] = {}
+        for gtype, gemm, w in rows:
+            key = plan_key(gemm, hw, objective=objective,
+                           spatial_mode=spatial_mode,
+                           allowed_walk01=allowed_walk01)
+            slot = by_digest.setdefault(key.digest, {
+                "type": gtype, "gemm": gemm, "key": key, "weight": 0})
+            slot["weight"] += w
+        # hit/miss split
+        hits, misses = {}, {}
+        for digest, slot in by_digest.items():
+            entry = self.store.get(slot["key"])
+            if entry is not None:
+                hits[digest] = entry
+            else:
+                misses[digest] = slot
+        # warm starts are computed against the pre-batch store state (the
+        # pool workers cannot see each other's incumbents)
+        tasks = []
+        warm = 0
+        for digest, slot in misses.items():
+            inc = (warm_incumbent(slot["gemm"], hw, slot["key"], self.store)
+                   if self.warm_start else None)
+            warm += inc is not None
+            tasks.append(_SolveTask(
+                digest=digest, gemm=slot["gemm"], hw=hw,
+                objective=objective, spatial_mode=spatial_mode,
+                allowed_walk01=allowed_walk01, incumbent=inc))
+        certs = solve_many(tasks, jobs=self.jobs)
+        for digest, cert in certs.items():
+            self.store.put(PlanEntry.from_solve(
+                misses[digest]["key"], cert, hw))
+        # manifest rows
+        entries: list[ManifestEntry] = []
+        solve_time = 0.0
+        for digest, slot in by_digest.items():
+            cached = digest in hits
+            cert = hits[digest].certificate if cached else certs[digest]
+            if not cached:
+                solve_time += cert.solve_time_s
+            entries.append(ManifestEntry(
+                gemm_type=slot["type"], dims=slot["gemm"].dims,
+                weight=slot["weight"], digest=digest,
+                objective=cert.objective, feasible=cert.feasible,
+                solve_time_s=cert.solve_time_s, cached=cached,
+                warm_started=getattr(cert, "warm_started", False)))
+        self.last_report = BatchReport(
+            total_gemms=len(rows), unique_gemms=len(by_digest),
+            hits=len(hits), solved=len(misses), warm_started=warm,
+            wall_time_s=time.perf_counter() - t0, solve_time_s=solve_time)
+        return entries
+
+    def plan_model(self, spec: LlmSpec, hw: AcceleratorSpec, *,
+                   prefill_seqs: Sequence[int] = (1024,),
+                   decode_batches: Sequence[int] = (),
+                   cache_len: int = 4096,
+                   objective: str = "energy") -> ModelMappingManifest:
+        """One LlmSpec scenario -> populated store + manifest."""
+        gemms = scenario_gemms(spec, prefill_seqs=prefill_seqs,
+                               decode_batches=decode_batches,
+                               cache_len=cache_len)
+        entries = self.plan_gemms(gemms, hw, objective=objective)
+        return ModelMappingManifest(
+            model=spec.name, hw_name=hw.name, objective=objective,
+            prefill_seqs=tuple(prefill_seqs),
+            decode_batches=tuple(decode_batches), cache_len=cache_len,
+            entries=entries, solver_version=SOLVER_VERSION)
+
+
+# ---------------------------------------------------------------------------
+# TPU / Pallas integration: store-driven tile plans
+# ---------------------------------------------------------------------------
+
+def prewarm_tpu_plans(shapes: Iterable[tuple[int, int, int]],
+                      store: PlanStore, *, dtype_bytes: int = 2) -> int:
+    """Populate the store (and process cache) with TPU tile plans for the
+    given (M, N, K) shapes; returns the number of shapes planned.
+
+    The store is *left installed* as the process plan store: prewarming
+    is the moment a deployment opts into read-through planning, and
+    restoring the previous store here would flush the plan cache that
+    was just built (``set_plan_store`` keeps the cache only when the
+    store is unchanged).  Call ``tpu_mapping.set_plan_store(None)`` to
+    opt back out."""
+    from ..core import tpu_mapping
+    n = 0
+    tpu_mapping.set_plan_store(store)
+    for (M, N, K) in shapes:
+        tpu_mapping.plan_gemm_tiling(M, N, K, dtype_bytes=dtype_bytes)
+        n += 1
+    return n
+
+
+def tile_plan_from_store(store: PlanStore, M: int, N: int, K: int, *,
+                         dtype_bytes: int = 2):
+    """Reconstruct a ``TpuTilePlan`` purely from cached plans — raises
+    KeyError on a miss instead of solving (the zero-solve serving path)."""
+    from ..core import tpu_mapping
+    gemm, hw, padded = tpu_mapping.tpu_problem(M, N, K,
+                                               dtype_bytes=dtype_bytes)
+    entry = store.get(plan_key(gemm, hw, objective="energy"))
+    if entry is None or entry.mapping is None:
+        raise KeyError(f"no cached plan for {(M, N, K)} "
+                       f"(dtype_bytes={dtype_bytes})")
+    m, cert = entry.mapping, entry.certificate
+    if m.alpha01 != "z" and m.L1[2] < padded[2]:
+        entry = store.get(plan_key(gemm, hw, objective="energy",
+                                   allowed_walk01=("z",)))
+        if entry is None or entry.mapping is None:
+            raise KeyError(f"no cached z-walk plan for {(M, N, K)}")
+        m, cert = entry.mapping, entry.certificate
+    return tpu_mapping.plan_from_mapping(M, N, K, padded, m,
+                                         objective=cert.objective,
+                                         solve_time_s=cert.solve_time_s)
+
+
+def serving_plan_shapes(arch_id: str, *, batch: int, prompt_len: int,
+                        cache_len: int) -> list[tuple[int, int, int]]:
+    """Distinct GEMM (M, N, K) shapes a serving deployment will hit:
+    the prefill extraction at prompt_len plus batched decode steps."""
+    from ..core.workloads import arch_decode_gemms, arch_gemms
+    shapes: list[tuple[int, int, int]] = []
+    seen = set()
+    rows = (arch_gemms(arch_id, seq=prompt_len, batch=batch)
+            + arch_decode_gemms(arch_id, batch=batch, cache_len=cache_len))
+    for _, gemm, _ in rows:
+        if gemm.dims not in seen:
+            seen.add(gemm.dims)
+            shapes.append(gemm.dims)
+    return shapes

@@ -1,0 +1,158 @@
+"""``python -m repro.plan`` — prebuild / inspect / verify plan databases.
+
+    # cold build: solve every GEMM of a prefill sweep + decode scenario
+    PYTHONPATH=src python -m repro.plan build --model llama-3.2-1b \
+        --hw eyeriss-like --seqs 1024,8192 --decode-batches 8 \
+        --store /tmp/plans --manifest /tmp/llama1b.manifest.json
+
+    # repo architectures (prefill + decode extraction)
+    PYTHONPATH=src python -m repro.plan build --arch rwkv6-7b \
+        --hw tpuv1-like --seqs 4096 --store /tmp/plans
+
+    # warm run: same command again -> 100% hit rate, 0 solves
+
+    PYTHONPATH=src python -m repro.plan inspect --store /tmp/plans
+    PYTHONPATH=src python -m repro.plan verify --store /tmp/plans
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from ..core.certificate import verify as verify_certificate
+from ..core.hardware import TEMPLATES
+from ..core.workloads import (CENTER_MODELS, EDGE_MODELS, arch_decode_gemms,
+                              arch_gemms)
+from .batch import BatchPlanner
+from .manifest import ModelMappingManifest
+from .store import PLAN_DB_ENV, PlanStore
+
+MODELS = {m.name: m for m in EDGE_MODELS + CENTER_MODELS}
+
+
+def _ints(s: str) -> list[int]:
+    return [int(x) for x in s.split(",") if x.strip()]
+
+
+def _add_store_arg(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--store", default=None,
+                    help=f"plan DB root (default: ${PLAN_DB_ENV})")
+
+
+def _open_store(args) -> PlanStore:
+    import os
+    root = args.store or os.environ.get(PLAN_DB_ENV, "").strip()
+    if not root:
+        sys.exit(f"error: pass --store or set ${PLAN_DB_ENV}")
+    return PlanStore(root)
+
+
+def cmd_build(args) -> int:
+    store = _open_store(args)
+    hw = TEMPLATES[args.hw]
+    planner = BatchPlanner(store, jobs=args.jobs,
+                           warm_start=not args.no_warm_start)
+    seqs = _ints(args.seqs)
+    decode = _ints(args.decode_batches) if args.decode_batches else []
+    if args.model:
+        spec = MODELS[args.model]
+        manifest = planner.plan_model(
+            spec, hw, prefill_seqs=seqs, decode_batches=decode,
+            cache_len=args.cache_len, objective=args.objective)
+    else:
+        gemms = []
+        for seq in seqs:
+            gemms.extend(arch_gemms(args.arch, seq=seq))
+        for b in decode:
+            gemms.extend(arch_decode_gemms(args.arch, batch=b,
+                                           cache_len=args.cache_len))
+        entries = planner.plan_gemms(gemms, hw, objective=args.objective)
+        from ..core.solver import SOLVER_VERSION
+        manifest = ModelMappingManifest(
+            model=args.arch, hw_name=hw.name, objective=args.objective,
+            prefill_seqs=tuple(seqs), decode_batches=tuple(decode),
+            cache_len=args.cache_len, entries=entries,
+            solver_version=SOLVER_VERSION)
+    rep = planner.last_report
+    print(manifest.summary())
+    print(f"[batch] gemms={rep.total_gemms} unique={rep.unique_gemms} "
+          f"hits={rep.hits} solved={rep.solved} "
+          f"warm_started={rep.warm_started} "
+          f"wall={rep.wall_time_s:.2f}s solve_cpu={rep.solve_time_s:.2f}s")
+    print(f"[store] {store.stats()}")
+    if args.manifest:
+        path = manifest.save(args.manifest)
+        print(f"[manifest] written to {path}")
+    return 0
+
+
+def cmd_inspect(args) -> int:
+    store = _open_store(args)
+    entries = list(store.entries())
+    print(f"[store] {store.root}: {len(entries)} plans")
+    by_hw: dict[str, int] = {}
+    for e in entries:
+        by_hw[e.hw_name] = by_hw.get(e.hw_name, 0) + 1
+    for hw_name, n in sorted(by_hw.items()):
+        print(f"  {hw_name}: {n}")
+    if args.verbose:
+        for e in sorted(entries, key=lambda e: e.gemm_dims):
+            c = e.certificate
+            print(f"  {e.digest[:12]} {e.hw_name:16s} "
+                  f"{str(e.gemm_dims):>24s} {e.objective_kind:6s} "
+                  f"obj={c.objective:.6g} t={c.solve_time_s:.3f}s "
+                  f"{'warm' if c.warm_started else 'cold'}")
+    return 0
+
+
+def cmd_verify(args) -> int:
+    store = _open_store(args)
+    bad = total = 0
+    for e in store.entries():
+        total += 1
+        if not verify_certificate(e.certificate, e.hw):
+            bad += 1
+            print(f"FAIL {e.digest[:12]} {e.hw_name} {e.gemm_dims}")
+    print(f"[verify] {total - bad}/{total} certificates verified"
+          + (f", {bad} FAILED" if bad else ""))
+    return 1 if bad else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.plan",
+        description="GOMA mapping-plan database builder/inspector")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    b = sub.add_parser("build", help="populate a store from a scenario")
+    grp = b.add_mutually_exclusive_group(required=True)
+    grp.add_argument("--model", choices=sorted(MODELS),
+                     help="paper LlmSpec model")
+    grp.add_argument("--arch", help="repo architecture id (repro.configs)")
+    b.add_argument("--hw", default="eyeriss-like", choices=sorted(TEMPLATES))
+    b.add_argument("--seqs", default="1024",
+                   help="comma-separated prefill sequence lengths")
+    b.add_argument("--decode-batches", default="",
+                   help="comma-separated decode batch sizes")
+    b.add_argument("--cache-len", type=int, default=4096)
+    b.add_argument("--objective", default="energy",
+                   choices=("energy", "edp"))
+    b.add_argument("--jobs", type=int, default=0,
+                   help="parallel solver processes (0 = cpu count)")
+    b.add_argument("--no-warm-start", action="store_true")
+    b.add_argument("--manifest", default=None,
+                   help="write the ModelMappingManifest JSON here")
+    _add_store_arg(b)
+    b.set_defaults(fn=cmd_build)
+
+    i = sub.add_parser("inspect", help="store stats / entry listing")
+    i.add_argument("--verbose", "-v", action="store_true")
+    _add_store_arg(i)
+    i.set_defaults(fn=cmd_inspect)
+
+    v = sub.add_parser("verify", help="re-verify every stored certificate")
+    _add_store_arg(v)
+    v.set_defaults(fn=cmd_verify)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)

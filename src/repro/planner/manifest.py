@@ -1,0 +1,124 @@
+"""ModelMappingManifest: the build artifact of one batch-planning run.
+
+A manifest binds a model scenario (prefill seq sweep + decode shapes) to
+the plan-store entries that cover it: one row per *distinct* GEMM shape
+with its occurrence weight, store digest, objective and provenance
+(cache hit vs fresh solve, warm-started or cold).  It is the unit a
+deployment ships: given the manifest plus the store, every kernel tiling
+decision for the model is a dictionary lookup — zero solver invocations
+on the serving path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+MANIFEST_SCHEMA = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ManifestEntry:
+    gemm_type: str
+    dims: tuple[int, int, int]        # (M, N, K) = (Lx, Ly, Lz)
+    weight: int                       # occurrence count (eq. 35 w_g)
+    digest: str                       # plan-store key
+    objective: float                  # certified pJ/MAC (or EDP scalar)
+    feasible: bool
+    solve_time_s: float
+    cached: bool                      # served from the store (no solve)
+    warm_started: bool = False
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dims"] = list(self.dims)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ManifestEntry":
+        d = dict(d)
+        d["dims"] = tuple(d["dims"])
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class ModelMappingManifest:
+    model: str
+    hw_name: str
+    objective: str
+    prefill_seqs: tuple[int, ...]
+    decode_batches: tuple[int, ...]
+    cache_len: int
+    entries: list[ManifestEntry]
+    created_unix: float = dataclasses.field(default_factory=time.time)
+    solver_version: str = ""
+
+    # -- aggregates --------------------------------------------------------
+    @property
+    def hit_rate(self) -> float:
+        if not self.entries:
+            return 0.0
+        return sum(e.cached for e in self.entries) / len(self.entries)
+
+    @property
+    def solved(self) -> int:
+        return sum(not e.cached for e in self.entries)
+
+    @property
+    def total_solve_time_s(self) -> float:
+        return sum(e.solve_time_s for e in self.entries if not e.cached)
+
+    def weighted_objective(self) -> float:
+        """Occurrence-weighted sum of per-GEMM objectives (eq. 35 shape)."""
+        return sum(e.weight * e.objective
+                   for e in self.entries if e.feasible)
+
+    def lookup(self, dims: tuple[int, int, int]) -> ManifestEntry | None:
+        for e in self.entries:
+            if e.dims == tuple(dims):
+                return e
+        return None
+
+    # -- persistence -------------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "schema_version": MANIFEST_SCHEMA,
+            "model": self.model,
+            "hw_name": self.hw_name,
+            "objective": self.objective,
+            "prefill_seqs": list(self.prefill_seqs),
+            "decode_batches": list(self.decode_batches),
+            "cache_len": self.cache_len,
+            "solver_version": self.solver_version,
+            "created_unix": self.created_unix,
+            "entries": [e.to_json() for e in self.entries],
+        }
+
+    def save(self, path: str | pathlib.Path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=1,
+                                   sort_keys=True))
+        return path
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "ModelMappingManifest":
+        d = json.loads(pathlib.Path(path).read_text())
+        return cls(
+            model=d["model"], hw_name=d["hw_name"],
+            objective=d["objective"],
+            prefill_seqs=tuple(d["prefill_seqs"]),
+            decode_batches=tuple(d["decode_batches"]),
+            cache_len=d["cache_len"],
+            entries=[ManifestEntry.from_json(e) for e in d["entries"]],
+            created_unix=d["created_unix"],
+            solver_version=d.get("solver_version", ""))
+
+    def summary(self) -> str:
+        n = len(self.entries)
+        return (f"[manifest] {self.model}@{self.hw_name} obj={self.objective}"
+                f"  gemms={n} hit_rate={self.hit_rate:.0%} "
+                f"solved={self.solved} "
+                f"solve_time={self.total_solve_time_s:.2f}s "
+                f"weighted_obj={self.weighted_objective():.6g}")

@@ -1,0 +1,364 @@
+"""Content-addressed, versioned on-disk store of solved mapping plans.
+
+Every entry is one exact solve: the optimal ``Mapping`` plus its zero-gap
+``Certificate``, serialized as a single JSON object.  Entries are keyed by
+a stable SHA-256 of the *semantic* solve identity — GEMM extents, every
+physical parameter of the ``AcceleratorSpec`` (names are metadata, not
+identity), solver version, objective, spatial mode and walk restrictions —
+so a store can be shared between processes, machines and sessions, and a
+solver-semantics bump (``core.solver.SOLVER_VERSION``) invalidates stale
+plans by construction rather than by migration.
+
+Layout (git-friendly, no global index to corrupt):
+
+    <root>/objects/<digest[:2]>/<digest>.json
+
+Writes are atomic (temp file + ``os.replace``); concurrent writers of the
+same key converge on identical bytes, so last-write-wins is benign.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import tempfile
+import time
+from typing import Iterator
+
+from ..core.certificate import Certificate
+from ..core.geometry import Gemm, Mapping
+from ..core.hardware import AcceleratorSpec, Ert
+from ..core.solver import SOLVER_VERSION
+
+SCHEMA_VERSION = 1
+
+# Environment variable consumed by read-through integration points
+# (core/tpu_mapping, serving.Engine): points at a store root directory.
+PLAN_DB_ENV = "GOMA_PLAN_DB"
+
+
+def _hw_identity(hw: AcceleratorSpec) -> dict:
+    """Physical identity of an accelerator — everything except its name."""
+    d = dataclasses.asdict(hw)
+    d.pop("name")
+    d["fixed_spatial"] = (list(hw.fixed_spatial)
+                         if hw.fixed_spatial is not None else None)
+    return d
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """The semantic identity of one exact solve (pre-hash form)."""
+
+    gemm_dims: tuple[int, int, int]
+    hw: AcceleratorSpec
+    objective: str = "energy"
+    spatial_mode: str | None = None
+    allowed_walk01: tuple[str, ...] | None = None
+    solver_version: str = SOLVER_VERSION
+
+    def payload(self) -> dict:
+        return {
+            "schema": SCHEMA_VERSION,
+            "solver_version": self.solver_version,
+            "gemm": list(self.gemm_dims),
+            "hw": _hw_identity(self.hw),
+            "objective": self.objective,
+            "spatial_mode": self.spatial_mode,
+            "allowed_walk01": (list(self.allowed_walk01)
+                               if self.allowed_walk01 is not None else None),
+        }
+
+    @property
+    def digest(self) -> str:
+        return _digest_of(self.payload())
+
+    @property
+    def family_digest(self) -> str:
+        """Identity minus the GEMM extents — the near-neighbor pool."""
+        p = self.payload()
+        p.pop("gemm")
+        return _digest_of(p)
+
+
+def _digest_of(payload: dict) -> str:
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def plan_key(gemm: Gemm, hw: AcceleratorSpec, *, objective: str = "energy",
+             spatial_mode: str | None = None,
+             allowed_walk01: tuple[str, ...] | None = None) -> PlanKey:
+    return PlanKey(gemm_dims=gemm.dims, hw=hw, objective=objective,
+                   spatial_mode=spatial_mode,
+                   allowed_walk01=tuple(allowed_walk01)
+                   if allowed_walk01 is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# JSON (de)serialization of the solved artifacts
+# ---------------------------------------------------------------------------
+
+def spec_to_json(hw: AcceleratorSpec) -> dict:
+    d = dataclasses.asdict(hw)
+    d["fixed_spatial"] = (list(hw.fixed_spatial)
+                          if hw.fixed_spatial is not None else None)
+    return d
+
+
+def spec_from_json(d: dict) -> AcceleratorSpec:
+    d = dict(d)
+    d["ert"] = Ert(**d["ert"])
+    if d.get("fixed_spatial") is not None:
+        d["fixed_spatial"] = tuple(d["fixed_spatial"])
+    return AcceleratorSpec(**d)
+
+
+def mapping_to_json(m: Mapping | None) -> dict | None:
+    if m is None:
+        return None
+    return {"L1": list(m.L1), "L2": list(m.L2), "L3": list(m.L3),
+            "alpha01": m.alpha01, "alpha12": m.alpha12,
+            "res1": list(m.res1), "res3": list(m.res3)}
+
+
+def mapping_from_json(d: dict | None) -> Mapping | None:
+    if d is None:
+        return None
+    return Mapping(L1=tuple(d["L1"]), L2=tuple(d["L2"]), L3=tuple(d["L3"]),
+                   alpha01=d["alpha01"], alpha12=d["alpha12"],
+                   res1=tuple(bool(b) for b in d["res1"]),
+                   res3=tuple(bool(b) for b in d["res3"]))
+
+
+def certificate_to_json(c: Certificate) -> dict:
+    return {
+        "gemm": {"dims": list(c.gemm.dims), "name": c.gemm.name},
+        "hw_name": c.hw_name,
+        "mapping": mapping_to_json(c.mapping),
+        "objective": c.objective,
+        "upper_bound": c.upper_bound,
+        "lower_bound": c.lower_bound,
+        "nodes_explored": c.nodes_explored,
+        "nodes_pruned": c.nodes_pruned,
+        "combos_skipped": c.combos_skipped,
+        "space_size": c.space_size,
+        "solve_time_s": c.solve_time_s,
+        "spatial_mode": c.spatial_mode,
+        "feasible": c.feasible,
+        "objective_kind": c.objective_kind,
+        "warm_started": c.warm_started,
+    }
+
+
+def certificate_from_json(d: dict) -> Certificate:
+    g = d["gemm"]
+    return Certificate(
+        gemm=Gemm(*g["dims"], name=g.get("name", "")),
+        hw_name=d["hw_name"],
+        mapping=mapping_from_json(d["mapping"]),
+        objective=d["objective"], upper_bound=d["upper_bound"],
+        lower_bound=d["lower_bound"], nodes_explored=d["nodes_explored"],
+        nodes_pruned=d["nodes_pruned"], combos_skipped=d["combos_skipped"],
+        space_size=d["space_size"], solve_time_s=d["solve_time_s"],
+        spatial_mode=d["spatial_mode"], feasible=d["feasible"],
+        objective_kind=d.get("objective_kind", "energy"),
+        warm_started=d.get("warm_started", False))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    """One stored solve — self-describing (full spec embedded) so a store
+    can be inspected and its certificates re-verified without access to
+    the code that built it."""
+
+    digest: str
+    family_digest: str
+    gemm_dims: tuple[int, int, int]
+    hw: AcceleratorSpec
+    objective_kind: str
+    mapping: Mapping | None
+    certificate: Certificate
+    created_unix: float
+
+    @property
+    def hw_name(self) -> str:
+        return self.hw.name
+
+    @property
+    def feasible(self) -> bool:
+        return self.certificate.feasible
+
+    def to_json(self) -> dict:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "digest": self.digest,
+            "family_digest": self.family_digest,
+            "gemm_dims": list(self.gemm_dims),
+            "hw": spec_to_json(self.hw),
+            "objective_kind": self.objective_kind,
+            "mapping": mapping_to_json(self.mapping),
+            "certificate": certificate_to_json(self.certificate),
+            "created_unix": self.created_unix,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PlanEntry":
+        return cls(digest=d["digest"], family_digest=d["family_digest"],
+                   gemm_dims=tuple(d["gemm_dims"]),
+                   hw=spec_from_json(d["hw"]),
+                   objective_kind=d["objective_kind"],
+                   mapping=mapping_from_json(d["mapping"]),
+                   certificate=certificate_from_json(d["certificate"]),
+                   created_unix=d["created_unix"])
+
+    @classmethod
+    def from_solve(cls, key: PlanKey, certificate: Certificate,
+                   hw: AcceleratorSpec) -> "PlanEntry":
+        return cls(digest=key.digest, family_digest=key.family_digest,
+                   gemm_dims=key.gemm_dims, hw=hw,
+                   objective_kind=certificate.objective_kind,
+                   mapping=certificate.mapping, certificate=certificate,
+                   created_unix=time.time())
+
+
+class PlanStore:
+    """Directory-backed plan database with an in-memory read cache.
+
+    ``get``/``put`` are the hot interface; ``nearest_neighbor`` supports
+    the batch planner's warm start; ``entries`` streams everything for
+    inspection/verification.  Hit/miss counters make cache behavior
+    observable (bench_planner, ``repro.plan inspect``).
+    """
+
+    def __init__(self, root: str | os.PathLike):
+        self.root = pathlib.Path(root)
+        (self.root / "objects").mkdir(parents=True, exist_ok=True)
+        self._mem: dict[str, PlanEntry] = {}
+        # family_digest -> [digest]; built lazily on the first
+        # nearest_neighbor call, maintained by put()
+        self._family_index: dict[str, list[str]] | None = None
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+
+    # -- paths -------------------------------------------------------------
+    def _path(self, digest: str) -> pathlib.Path:
+        return self.root / "objects" / digest[:2] / f"{digest}.json"
+
+    def _load(self, digest: str) -> PlanEntry | None:
+        """Fetch without touching the hit/miss counters (internal reads:
+        index builds, neighbor lookups, entry iteration)."""
+        entry = self._mem.get(digest)
+        if entry is not None:
+            return entry
+        path = self._path(digest)
+        if not path.exists():
+            return None
+        try:
+            entry = PlanEntry.from_json(json.loads(path.read_text()))
+        except (json.JSONDecodeError, KeyError):
+            return None             # corrupt/foreign file: treat as miss
+        self._mem[digest] = entry
+        return entry
+
+    # -- core interface ----------------------------------------------------
+    def get(self, key: PlanKey | str) -> PlanEntry | None:
+        digest = key if isinstance(key, str) else key.digest
+        entry = self._load(digest)
+        if entry is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def contains(self, key: PlanKey | str) -> bool:
+        digest = key if isinstance(key, str) else key.digest
+        return digest in self._mem or self._path(digest).exists()
+
+    def put(self, entry: PlanEntry) -> None:
+        path = self._path(entry.digest)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        blob = json.dumps(entry.to_json(), sort_keys=True, indent=1)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(blob)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self._mem[entry.digest] = entry
+        if self._family_index is not None:
+            fam = self._family_index.setdefault(entry.family_digest, [])
+            if entry.digest not in fam:
+                fam.append(entry.digest)
+        self.puts += 1
+
+    # -- inspection --------------------------------------------------------
+    def entries(self) -> Iterator[PlanEntry]:
+        for path in sorted((self.root / "objects").glob("*/*.json")):
+            entry = self._load(path.stem)
+            if entry is not None:
+                yield entry
+
+    def __len__(self) -> int:
+        return sum(1 for _ in (self.root / "objects").glob("*/*.json"))
+
+    def __bool__(self) -> bool:
+        # an *empty* store is still a store — never truth-test to None
+        return True
+
+    def stats(self) -> dict:
+        return {"root": str(self.root), "entries": len(self),
+                "hits": self.hits, "misses": self.misses, "puts": self.puts}
+
+    # -- warm-start support ------------------------------------------------
+    def _families(self) -> dict[str, list[str]]:
+        """Per-family digest index: one full scan on first use, then
+        maintained incrementally by put().  Entries written by *other*
+        processes after the scan are not candidates until a fresh
+        PlanStore is opened — acceptable for a warm-start heuristic."""
+        if self._family_index is None:
+            idx: dict[str, list[str]] = {}
+            for e in self.entries():
+                idx.setdefault(e.family_digest, []).append(e.digest)
+            self._family_index = idx
+        return self._family_index
+
+    def nearest_neighbor(self, key: PlanKey) -> PlanEntry | None:
+        """Closest stored solve of the same family (hw/objective/version),
+        by log-space distance over the GEMM extents."""
+        import math
+        tgt = [math.log(max(1, d)) for d in key.gemm_dims]
+        best, best_d = None, float("inf")
+        for digest in self._families().get(key.family_digest, ()):
+            if digest == key.digest:
+                continue
+            e = self._load(digest)
+            if e is None or not e.feasible or e.mapping is None:
+                continue
+            d = sum((math.log(max(1, x)) - t) ** 2
+                    for x, t in zip(e.gemm_dims, tgt))
+            if d < best_d:
+                best, best_d = e, d
+        return best
+
+
+def resolve_default_store() -> PlanStore | None:
+    """The process-default store: ``$GOMA_PLAN_DB`` if set, else None."""
+    root = os.environ.get(PLAN_DB_ENV, "").strip()
+    return PlanStore(root) if root else None
+
+
+# Ert is re-exported so batch workers can rebuild specs without importing
+# core.hardware directly (keeps the subprocess import surface small).
+__all__ = [
+    "Ert", "PLAN_DB_ENV", "PlanEntry", "PlanKey", "PlanStore",
+    "SCHEMA_VERSION", "certificate_from_json", "certificate_to_json",
+    "mapping_from_json", "mapping_to_json", "plan_key",
+    "resolve_default_store",
+]

@@ -27,13 +27,44 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, model: Model, params, cfg: ServeConfig):
+    def __init__(self, model: Model, params, cfg: ServeConfig, *,
+                 plan_store=None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        # optional GOMA plan database (repro.planner.PlanStore): serving
+        # traffic consumes cached kernel tilings instead of solving inline
+        self.plan_store = plan_store
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len=cfg.cache_len))
         self._decode = jax.jit(model.decode_step)
+
+    def prewarm_plans(self, arch_id: str, batch: int, prompt_len: int, *,
+                      dtype_bytes: int | None = None) -> int:
+        """Pre-plan every GEMM tiling this deployment will hit (prefill at
+        prompt_len + batched decode against the KV cache), through the
+        plan database when one is installed.  After this, the serving loop
+        never invokes the GOMA solver: every `kernels.ops.gemm` dispatch
+        resolves its TpuTilePlan from cache.  Returns #shapes planned.
+
+        dtype_bytes defaults to the model's compute dtype — plan identity
+        includes the dtype-rescaled VMEM capacity, so prewarming bf16
+        plans for an f32 engine would all miss at dispatch time."""
+        from ..planner.batch import prewarm_tpu_plans, serving_plan_shapes
+        from ..planner.store import resolve_default_store
+        if dtype_bytes is None:
+            dtype_bytes = jnp.dtype(self.model.cfg.compute_dtype).itemsize
+        shapes = serving_plan_shapes(arch_id, batch=batch,
+                                     prompt_len=prompt_len,
+                                     cache_len=self.cfg.cache_len)
+        store = (self.plan_store if self.plan_store is not None
+                 else resolve_default_store())
+        if store is None:
+            from ..core.tpu_mapping import plan_gemm_tiling
+            for s in shapes:        # in-process lru warm only
+                plan_gemm_tiling(*s, dtype_bytes=dtype_bytes)
+            return len(shapes)
+        return prewarm_tpu_plans(shapes, store, dtype_bytes=dtype_bytes)
 
     def generate(self, tokens: np.ndarray, *, extra_batch: dict | None
                  = None, rng: jax.Array | None = None) -> np.ndarray:

@@ -33,7 +33,7 @@ def compressed_psum(g: jnp.ndarray, err: jnp.ndarray, axis_names):
     summed = jax.lax.psum(q.astype(jnp.int32), axis_names)
     n = 1
     for a in axis_names:
-        n *= jax.lax.axis_size(a)
+        n *= jax.lax.psum(1, a)
     mean = summed.astype(jnp.float32) * scale / n
     return mean.astype(g.dtype), new_err
 

@@ -1,4 +1,6 @@
 """Hardware/mapping co-design sweep (beyond-paper, core/codesign.py)."""
+import pytest
+
 from repro.core.codesign import (DesignPoint, area_proxy, evaluate_design,
                                  pareto_frontier, sweep)
 from repro.core.hardware import EYERISS_LIKE
@@ -12,6 +14,7 @@ def test_area_proxy_monotone():
     assert area_proxy(256, 162 * 1024, 848) > a
 
 
+@pytest.mark.slow    # full exact solves over the design grid, ~17s
 def test_small_sweep_and_frontier():
     pts = sweep(EYERISS_LIKE, QWEN3_0_6B, 1024,
                 pe_opts=(64, 256), sram_kib_opts=(64, 162),

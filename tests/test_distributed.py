@@ -6,6 +6,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow    # ~30s subprocess with 8 fake devices
+
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 

@@ -11,6 +11,8 @@ from repro.data import DataConfig, host_batch
 from repro.training import LoopConfig, optimizer as opt, run_training
 from repro.training.loop import LoopState
 
+pytestmark = pytest.mark.slow    # watchdog sleeps + serve loops, ~15s
+
 
 @pytest.fixture()
 def host_data(monkeypatch):

@@ -8,6 +8,8 @@ import pytest
 from repro.configs import ARCHS, get_config
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow    # 10-arch train/decode sweep, ~90s
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -1,0 +1,263 @@
+"""Planner subsystem: store round-trips, cache semantics, key stability
+across processes, parallel==sequential batch solves, warm-started
+branch-and-bound soundness, and store/manifest-driven kernel dispatch."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+from repro.core import Gemm, TEMPLATES, solve, verify
+from repro.core.hardware import AcceleratorSpec, Ert
+from repro.core.workloads import LlmSpec, prefill_gemms, scenario_gemms
+from repro.planner import (BatchPlanner, ModelMappingManifest, PlanStore,
+                           cached_solve, plan_key)
+from repro.planner.store import PlanEntry
+
+ERT = Ert(dram_read=200.0, dram_write=200.0, sram_read=6.0, sram_write=6.5,
+          rf_read=1.0, rf_write=1.1, macc=2.0, sram_leak=0.1,
+          rf_leak=0.001)
+HW = AcceleratorSpec(name="tiny4", sram_words=96, rf_words=8, num_pe=4,
+                     ert=ERT)
+TINY = LlmSpec("tiny", layers=2, d_model=64, n_heads=4, kv_heads=2,
+               head_dim=16, d_ff=128, vocab=512)
+
+
+def test_store_round_trip(tmp_path):
+    """save -> load (fresh store object) -> identical Mapping/objective."""
+    store = PlanStore(tmp_path)
+    gemm = Gemm(8, 8, 8)
+    res = cached_solve(gemm, HW, store=store)
+    assert res.mapping is not None
+
+    store2 = PlanStore(tmp_path)      # fresh in-memory cache, same disk
+    entry = store2.get(plan_key(gemm, HW))
+    assert entry is not None
+    assert entry.mapping == res.mapping
+    assert entry.certificate.objective == res.certificate.objective
+    assert entry.certificate.upper_bound == res.certificate.upper_bound
+    assert entry.certificate.lower_bound == res.certificate.lower_bound
+    assert entry.hw == HW             # specs are self-describing
+    assert verify(entry.certificate, entry.hw)
+
+
+def test_cache_hit_miss_semantics(tmp_path):
+    store = PlanStore(tmp_path)
+    gemm = Gemm(8, 4, 4)
+    key = plan_key(gemm, HW)
+    assert store.get(key) is None and store.misses == 1
+    cached_solve(gemm, HW, store=store)       # miss -> solve -> put
+    assert store.puts == 1
+    res2 = cached_solve(gemm, HW, store=store)
+    assert store.puts == 1 and store.hits >= 1   # served from cache
+    # different objective / walk restriction / dims are distinct keys
+    assert plan_key(gemm, HW, objective="edp").digest != key.digest
+    assert plan_key(gemm, HW,
+                    allowed_walk01=("z",)).digest != key.digest
+    assert plan_key(Gemm(8, 4, 2), HW).digest != key.digest
+    # hw name is metadata, not identity
+    import dataclasses
+    renamed = dataclasses.replace(HW, name="other")
+    assert plan_key(gemm, renamed).digest == key.digest
+    assert res2.certificate.feasible
+
+
+def test_key_stability_across_processes(tmp_path):
+    """The content hash must be reproducible in a fresh interpreter."""
+    code = (
+        f"import sys; sys.path.insert(0, {str(ROOT / 'src')!r})\n"
+        "from repro.core import Gemm\n"
+        "from repro.core.hardware import AcceleratorSpec, Ert\n"
+        "from repro.planner import plan_key\n"
+        "ert = Ert(dram_read=200.0, dram_write=200.0, sram_read=6.0,\n"
+        "          sram_write=6.5, rf_read=1.0, rf_write=1.1, macc=2.0,\n"
+        "          sram_leak=0.1, rf_leak=0.001)\n"
+        "hw = AcceleratorSpec(name='tiny4', sram_words=96, rf_words=8,\n"
+        "                     num_pe=4, ert=ert)\n"
+        "print(plan_key(Gemm(8, 8, 8), hw).digest)\n")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == plan_key(Gemm(8, 8, 8), HW).digest
+
+
+def test_parallel_equals_sequential(tmp_path):
+    gemms = prefill_gemms(TINY, 96)
+    seq_store = PlanStore(tmp_path / "seq")
+    par_store = PlanStore(tmp_path / "par")
+    e_seq = BatchPlanner(seq_store, jobs=1).plan_gemms(gemms, HW)
+    e_par = BatchPlanner(par_store, jobs=2).plan_gemms(gemms, HW)
+    assert len(e_seq) == len(e_par) > 0
+    for a, b in zip(sorted(e_seq, key=lambda e: e.digest),
+                    sorted(e_par, key=lambda e: e.digest)):
+        assert a.digest == b.digest
+        assert a.objective == b.objective
+        sa = seq_store.get(a.digest)
+        sb = par_store.get(b.digest)
+        assert sa.mapping == sb.mapping
+
+
+def test_batch_cold_then_warm(tmp_path):
+    store = PlanStore(tmp_path)
+    planner = BatchPlanner(store, jobs=1)
+    man1 = planner.plan_model(TINY, HW, prefill_seqs=(64, 128),
+                              decode_batches=(4,), cache_len=256)
+    rep1 = planner.last_report
+    assert rep1.solved == rep1.unique_gemms and rep1.hits == 0
+    man2 = planner.plan_model(TINY, HW, prefill_seqs=(64, 128),
+                              decode_batches=(4,), cache_len=256)
+    rep2 = planner.last_report
+    assert rep2.solved == 0 and rep2.hit_rate == 1.0
+    # cached plans bit-exactly reproduce the solver's objective
+    assert [e.objective for e in man2.entries] == \
+           [e.objective for e in man1.entries]
+    assert man2.weighted_objective() == man1.weighted_objective()
+
+
+def test_warm_start_keeps_zero_gap(tmp_path):
+    store = PlanStore(tmp_path)
+    cached_solve(Gemm(64, 128, 64), TEMPLATES["eyeriss-like"], store=store)
+    res = cached_solve(Gemm(128, 128, 64), TEMPLATES["eyeriss-like"],
+                       store=store, warm_start=True)
+    cert = res.certificate
+    assert cert.warm_started and cert.feasible
+    assert cert.upper_bound == cert.lower_bound       # zero-gap certificate
+    cold = solve(Gemm(128, 128, 64), TEMPLATES["eyeriss-like"])
+    assert cold.certificate.objective == cert.objective
+    assert cold.mapping == res.mapping
+
+
+def test_incumbent_over_pruning_falls_back():
+    """An incumbent at/below the optimum must never change the answer."""
+    gemm, hw = Gemm(8, 8, 8), HW
+    cold = solve(gemm, hw)
+    for frac in (0.5, 1.0):
+        res = solve(gemm, hw, incumbent=cold.certificate.objective * frac)
+        assert res.certificate.objective == cold.certificate.objective
+        assert res.mapping == cold.mapping
+
+
+def test_manifest_round_trip(tmp_path):
+    store = PlanStore(tmp_path / "db")
+    man = BatchPlanner(store, jobs=1).plan_model(
+        TINY, HW, prefill_seqs=(64,))
+    path = man.save(tmp_path / "m.json")
+    man2 = ModelMappingManifest.load(path)
+    assert man2.model == man.model and man2.hw_name == man.hw_name
+    assert man2.entries == man.entries
+    assert man2.weighted_objective() == man.weighted_objective()
+    assert man2.lookup(man.entries[0].dims) == man.entries[0]
+
+
+def test_manifest_driven_goma_matmul(tmp_path):
+    """Store-driven TpuTilePlan reconstruction feeds goma_matmul with zero
+    solver invocations; result equals the jnp reference."""
+    import jax
+    import numpy as np
+    from repro.kernels.ops import gemm as gemm_op
+    from repro.kernels.ref import matmul_ref
+    from repro.planner.batch import prewarm_tpu_plans, tile_plan_from_store
+
+    from repro.core import tpu_mapping
+    store = PlanStore(tmp_path)
+    M, N, K = 300, 200, 100
+    try:
+        prewarm_tpu_plans([(M, N, K)], store)
+    finally:
+        tpu_mapping.set_plan_store(None)    # prewarm leaves it installed
+    plan = tile_plan_from_store(store, M, N, K)
+    assert store.puts > 0
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 0.1
+    out = gemm_op(a, b, interpret=True, plan=plan)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(matmul_ref(a, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_tpu_read_through(tmp_path):
+    """plan_gemm_tiling consults an installed store instead of solving."""
+    from repro.core import tpu_mapping
+    store = PlanStore(tmp_path)
+    prev = tpu_mapping.get_plan_store()
+    tpu_mapping.set_plan_store(store)
+    try:
+        p1 = tpu_mapping.plan_gemm_tiling(256, 512, 128)
+        assert store.puts >= 1
+        # drop the in-process cache; the db must satisfy the re-plan
+        tpu_mapping.plan_gemm_tiling.cache_clear()
+        puts_before, hits_before = store.puts, store.hits
+        p2 = tpu_mapping.plan_gemm_tiling(256, 512, 128)
+        assert store.puts == puts_before        # no new solve
+        assert store.hits > hits_before         # served from the db
+        assert p2.block == p1.block and p2.grid_order == p1.grid_order
+        assert p2.objective == p1.objective
+    finally:
+        tpu_mapping.set_plan_store(prev)
+
+
+def test_prewarm_keeps_store_and_cache_installed(tmp_path):
+    """Regression: prewarming must not flush the plan cache it built nor
+    uninstall the store (the serving loop then consumes cached plans)."""
+    from repro.core import tpu_mapping
+    store = PlanStore(tmp_path)
+    from repro.planner.batch import prewarm_tpu_plans
+    try:
+        prewarm_tpu_plans([(256, 512, 128)], store)
+        assert tpu_mapping.get_plan_store() is store
+        assert tpu_mapping.plan_gemm_tiling.cache_info().currsize >= 1
+        puts = store.puts
+        tpu_mapping.plan_gemm_tiling(256, 512, 128)   # lru, no new solve
+        assert store.puts == puts
+    finally:
+        tpu_mapping.set_plan_store(None)
+
+
+def test_corrupt_entry_is_a_miss(tmp_path):
+    store = PlanStore(tmp_path)
+    gemm = Gemm(8, 8, 8)
+    res = cached_solve(gemm, HW, store=store)
+    key = plan_key(gemm, HW)
+    path = store._path(key.digest)
+    path.write_text("{not json")
+    store2 = PlanStore(tmp_path)
+    assert store2.get(key) is None              # treated as miss, no raise
+    res2 = cached_solve(gemm, HW, store=store2)  # heals the entry
+    assert res2.certificate.objective == res.certificate.objective
+    assert PlanStore(tmp_path).get(key) is not None
+
+
+def test_cli_build_inspect_verify(tmp_path, capsys):
+    from repro.planner.cli import main
+    db = str(tmp_path / "db")
+    rc = main(["build", "--model", "llama-3.2-1b", "--hw", "gemmini-like",
+               "--seqs", "64", "--store", db,
+               "--manifest", str(tmp_path / "m.json"), "--jobs", "1"])
+    assert rc == 0
+    out1 = capsys.readouterr().out
+    assert "hit_rate=0%" in out1
+    rc = main(["build", "--model", "llama-3.2-1b", "--hw", "gemmini-like",
+               "--seqs", "64", "--store", db, "--jobs", "1"])
+    assert rc == 0
+    assert "hit_rate=100%" in capsys.readouterr().out
+    assert main(["inspect", "--store", db, "-v"]) == 0
+    assert main(["verify", "--store", db]) == 0
+    capsys.readouterr()
+    man = ModelMappingManifest.load(tmp_path / "m.json")
+    assert len(man.entries) > 0
+    data = json.loads((tmp_path / "m.json").read_text())
+    assert data["schema_version"] == 1
+
+
+def test_scenario_gemms_dedup_shape():
+    rows = scenario_gemms(TINY, prefill_seqs=(64, 128),
+                          decode_batches=(4,), cache_len=256)
+    assert len(rows) == 3 * 8                 # 8 gemm types per phase
+    store_entries = {}
+    for _, g, w in rows:
+        store_entries.setdefault(g.dims, 0)
+        store_entries[g.dims] += w
+    assert len(store_entries) < len(rows)     # lm_head dedups across seqs

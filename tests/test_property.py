@@ -1,6 +1,12 @@
-"""Hypothesis property tests on the system's core invariants."""
-import hypothesis
-from hypothesis import given, settings, strategies as st
+"""Hypothesis property tests on the system's core invariants.
+
+``hypothesis`` is an optional dev dependency: when absent the module
+skips instead of failing collection.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (EYERISS_LIKE, Gemm, Mapping, analytical_counts,
                         analytical_energy, reference_counts,

@@ -13,6 +13,8 @@ from repro.serving import Engine, ServeConfig
 from repro.training import LoopConfig, optimizer as opt, run_training
 from repro.training.train_step import make_train_step
 
+pytestmark = pytest.mark.slow    # CPU training loops, ~15s
+
 
 @pytest.fixture(scope="module")
 def tiny_setup():
