@@ -1,0 +1,179 @@
+"""Solver-engine regression benchmark -> BENCH_solver.json.
+
+Tracks the exact solver's perf trajectory across PRs: per-case solve
+times and search counters (nodes explored/pruned, combos skipped) for
+both engines (vectorized frontier vs reference DFS), the 128k-seq
+scaling-point speedup (the headline time-to-solution claim), axis-cache
+hit rates, and the planner's cold vs warm scenario build.  The JSON is
+written to the repo root so the numbers are diffable across commits.
+
+    PYTHONPATH=src python benchmarks/bench_solver.py           # full
+    PYTHONPATH=src python benchmarks/bench_solver.py --smoke   # CI gate
+
+The smoke mode is the CI fast-lane step: one GEMM (the 128k scaling
+point, where the engine gap is widest and the assertion noise-proof),
+asserting the vectorized engine matches the reference objective
+bit-for-bit and is no slower — a loud failure on any engine regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from common import ROOT, Timer, emit
+
+from repro.core import TEMPLATES, Gemm
+from repro.core.solver import (SOLVER_VERSION, axis_cache_stats,
+                               clear_axis_cache, solve)
+
+BENCH_PATH = ROOT / "BENCH_solver.json"
+
+# (name, gemm, hw template, objective, spatial_mode).  The 128k scaling
+# point is NOT a case here: the "scaling_128k" section (engine_ab) owns
+# it, so a full benchmark pass measures it once.
+CASES = [
+    ("eyeriss_1k", Gemm(1024, 2048, 2048, "eyeriss_1k"),
+     "eyeriss-like", "energy", None),
+    ("gemmini_llama_ffn", Gemm(2048, 8192, 2048, "llama_ffn"),
+     "gemmini-like", "energy", None),
+    ("tpu_fixed_4k", Gemm(4096, 4096, 4096, "tpu_4k"),
+     "tpuv5e-like", "energy", None),
+]
+
+# CI gate case: the 128k scaling point — the engine gap there is >10x,
+# so the wall-time assertion has margin against CI noise (the mid-size
+# cases win by ~2x cold, too thin for a hard gate)
+SMOKE_CASE = ("a100_mlp_128k", Gemm(131072, 25600, 5120, "mlp_128k"),
+              "a100-like", "edp", "le")
+
+
+def _solve_case(gemm, hw, objective, mode, engine, *, cold: bool):
+    if cold:
+        clear_axis_cache()
+    t0 = time.perf_counter()
+    res = solve(gemm, hw, objective=objective, spatial_mode=mode,
+                engine=engine)
+    return time.perf_counter() - t0, res
+
+
+def engine_case(name, gemm, hw_name, objective, mode) -> dict:
+    hw = TEMPLATES[hw_name]
+    row: dict = {"case": name, "dims": list(gemm.dims), "hw": hw_name,
+                 "objective": objective}
+    certs = {}
+    for engine in ("reference", "vectorized"):
+        t_cold, res = _solve_case(gemm, hw, objective, mode, engine,
+                                  cold=True)
+        t_warm, _ = _solve_case(gemm, hw, objective, mode, engine,
+                                cold=False)
+        c = res.certificate
+        certs[engine] = c
+        row[engine] = {
+            "cold_s": t_cold, "warm_s": t_warm, "objective": c.objective,
+            "nodes_explored": c.nodes_explored,
+            "nodes_pruned": c.nodes_pruned,
+            "combos_skipped": c.combos_skipped, "gap": c.gap,
+        }
+    assert certs["reference"].objective == certs["vectorized"].objective, \
+        (name, certs["reference"].objective, certs["vectorized"].objective)
+    assert certs["reference"].mapping == certs["vectorized"].mapping, name
+    row["objective_equal"] = True
+    row["speedup_cold"] = (row["reference"]["cold_s"]
+                           / max(row["vectorized"]["cold_s"], 1e-9))
+    row["speedup_warm"] = (row["reference"]["warm_s"]
+                           / max(row["vectorized"]["warm_s"], 1e-9))
+    return row
+
+
+def planner_build() -> dict:
+    """Cold vs warm scenario build through the plan database (jobs=1 so
+    the in-process axis memo — not the pool — carries the batch)."""
+    import shutil
+    import tempfile
+
+    from repro.core.workloads import QWEN3_0_6B
+    from repro.planner import BatchPlanner, PlanStore
+
+    hw = TEMPLATES["gemmini-like"]
+    root = tempfile.mkdtemp(prefix="goma_benchsolver_")
+    try:
+        store = PlanStore(root)
+        planner = BatchPlanner(store, jobs=1)
+        clear_axis_cache()
+        with Timer() as t_cold:
+            planner.plan_model(QWEN3_0_6B, hw, prefill_seqs=(1024, 4096),
+                               decode_batches=(8,), cache_len=4096)
+        rep_cold = planner.last_report
+        with Timer() as t_warm:
+            planner.plan_model(QWEN3_0_6B, hw, prefill_seqs=(1024, 4096),
+                               decode_batches=(8,), cache_len=4096)
+        rep_warm = planner.last_report
+        return {
+            "model": QWEN3_0_6B.name, "hw": hw.name,
+            "cold_s": t_cold.dt, "warm_s": t_warm.dt,
+            "speedup": t_cold.dt / max(t_warm.dt, 1e-9),
+            "unique_gemms": rep_cold.unique_gemms,
+            "cold_solved": rep_cold.solved,
+            "warm_hit_rate": rep_warm.hit_rate,
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def smoke() -> dict:
+    """CI gate: vectorized must match the reference objective exactly
+    and be no slower, on the 128k scaling point."""
+    name, gemm, hw_name, objective, mode = SMOKE_CASE
+    row = engine_case(name, gemm, hw_name, objective, mode)
+    ref, vec = row["reference"], row["vectorized"]
+    emit("solver[smoke]", vec["cold_s"] * 1e6,
+         f"{name} ref={ref['cold_s']:.3f}s vec={vec['cold_s']:.3f}s "
+         f"speedup={row['speedup_cold']:.1f}x obj_equal=True")
+    assert vec["cold_s"] <= ref["cold_s"], \
+        f"vectorized slower than reference: {vec['cold_s']:.3f}s " \
+        f"vs {ref['cold_s']:.3f}s"
+    return row
+
+
+def run(*, smoke_only: bool = False) -> dict:
+    if smoke_only:
+        return smoke()
+    import bench_solver_scaling
+
+    out: dict = {"solver_version": SOLVER_VERSION,
+                 "generated_unix": time.time()}
+    cases = []
+    for case in CASES:
+        row = engine_case(*case)
+        cases.append(row)
+        emit(f"solver[{row['case']}]", row["vectorized"]["cold_s"] * 1e6,
+             f"ref={row['reference']['cold_s']:.3f}s "
+             f"vec={row['vectorized']['cold_s']:.3f}s "
+             f"cold={row['speedup_cold']:.1f}x "
+             f"warm={row['speedup_warm']:.1f}x")
+    out["cases"] = cases
+    out["scaling_128k"] = bench_solver_scaling.engine_ab()
+    emit("solver[scaling_128k]",
+         out["scaling_128k"]["vectorized"]["cold_s"] * 1e6,
+         f"cold={out['scaling_128k']['speedup_cold']:.1f}x "
+         f"sweep={out['scaling_128k']['speedup_sweep']:.1f}x")
+    out["axis_cache"] = axis_cache_stats()
+    out["planner"] = planner_build()
+    emit("solver[planner]", out["planner"]["cold_s"] * 1e6,
+         f"cold={out['planner']['cold_s']:.2f}s "
+         f"warm={out['planner']['warm_s']:.4f}s "
+         f"speedup={out['planner']['speedup']:.0f}x")
+    pathlib.Path(BENCH_PATH).write_text(json.dumps(out, indent=1) + "\n")
+    print(f"wrote {BENCH_PATH}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: one mid-size case, assert equal "
+                         "objective and vectorized <= reference time")
+    args = ap.parse_args()
+    run(smoke_only=args.smoke)

@@ -5,17 +5,70 @@ only weakly on the numeric X/Y/Z scales; its time-to-solution should stay
 flat as sequence length grows 1k -> 128k, while search baselines grow.
 Runs the mlp_gate_up GEMM of Qwen3-32B on A100-like across sequence
 lengths, for GOMA and the two structurally closest baselines.
+
+Also A/B-tests the two exact-solver engines (vectorized frontier vs the
+reference DFS) on the largest (128k-seq) point — the single-solve
+speedup the perf trajectory tracks in BENCH_solver.json (bench_solver).
 """
 from __future__ import annotations
+
+import time
 
 from common import emit, write_csv
 
 from repro.core import TEMPLATES, Gemm
 from repro.core.mappers import ALL_MAPPERS
+from repro.core.solver import clear_axis_cache, solve
 from repro.core.workloads import QWEN3_32B
 
 SEQS = (1024, 4096, 16384, 65536, 131072)
 MAPPERS = ("goma", "cosa", "loma", "salsa")
+
+
+def engine_ab(seq: int = SEQS[-1], objective: str = "edp",
+              hw_name: str = "a100-like", warm_seq: int = SEQS[0]) -> dict:
+    """Single-solve engine comparison at one scaling point.
+
+    Each engine is measured twice: cold (empty axis-candidate cache) and
+    in-sweep (after solving the smallest sweep point, so the shared
+    d_ff/d_model axes are memoized — the state every sweep solve after
+    the first actually runs in).  Both engines share the same axis memo,
+    so the comparison isolates the search itself.
+    """
+    hw = TEMPLATES[hw_name]
+    spec = QWEN3_32B
+    gemm = Gemm(seq, spec.d_ff, spec.d_model, f"mlp_gate_up_{seq}")
+    warm_gemm = Gemm(warm_seq, spec.d_ff, spec.d_model, "warmup")
+    mode = "le" if objective == "edp" else None
+    out: dict = {"seq": seq, "hw": hw_name, "objective": objective}
+    results = {}
+    for engine in ("reference", "vectorized"):
+        clear_axis_cache()
+        t0 = time.perf_counter()
+        res = solve(gemm, hw, objective=objective, spatial_mode=mode,
+                    engine=engine)
+        cold = time.perf_counter() - t0
+        clear_axis_cache()
+        solve(warm_gemm, hw, objective=objective, spatial_mode=mode,
+              engine=engine)
+        t0 = time.perf_counter()
+        solve(gemm, hw, objective=objective, spatial_mode=mode,
+              engine=engine)
+        sweep = time.perf_counter() - t0
+        cert = res.certificate
+        results[engine] = cert
+        out[engine] = {"cold_s": cold, "sweep_s": sweep,
+                       "objective": cert.objective,
+                       "nodes_explored": cert.nodes_explored,
+                       "nodes_pruned": cert.nodes_pruned,
+                       "combos_skipped": cert.combos_skipped}
+    assert results["reference"].objective == results["vectorized"].objective
+    assert (results["reference"].mapping == results["vectorized"].mapping)
+    out["speedup_cold"] = (out["reference"]["cold_s"]
+                           / max(out["vectorized"]["cold_s"], 1e-9))
+    out["speedup_sweep"] = (out["reference"]["sweep_s"]
+                            / max(out["vectorized"]["sweep_s"], 1e-9))
+    return out
 
 
 def run(mappers=MAPPERS, seqs=SEQS, seed: int = 0) -> dict:
@@ -36,6 +89,12 @@ def run(mappers=MAPPERS, seqs=SEQS, seed: int = 0) -> dict:
         growth = ts[-1] / ts[0] if ts[0] > 0 else float("inf")
         emit(f"scaling[{m}]", ts[-1] * 1e6,
              f"t(1k)={ts[0]:.3f}s t(128k)={ts[-1]:.3f}s growth={growth:.2f}x")
+    ab = engine_ab(seqs[-1])
+    emit("scaling[engine_ab]", ab["vectorized"]["cold_s"] * 1e6,
+         f"128k ref={ab['reference']['cold_s']:.3f}s "
+         f"vec={ab['vectorized']['cold_s']:.3f}s "
+         f"cold={ab['speedup_cold']:.1f}x sweep={ab['speedup_sweep']:.1f}x")
+    out["engine_ab"] = ab
     return out
 
 

@@ -16,6 +16,8 @@ Suites:
   roofline   dry-run-derived roofline terms (EXPERIMENTS.md §Roofline)
   planner    plan-database cold/warm builds + warm starts
              (EXPERIMENTS.md §Planner)
+  solver     engine A/B (vectorized frontier vs reference DFS) ->
+             BENCH_solver.json perf-trajectory artifact at the repo root
 """
 from __future__ import annotations
 
@@ -82,6 +84,9 @@ def main() -> None:
     if on("planner"):
         import bench_planner
         guarded("planner", lambda: bench_planner.run())
+    if on("solver"):
+        import bench_solver
+        guarded("solver", lambda: bench_solver.run())
     if on("roofline"):
         try:
             import bench_roofline

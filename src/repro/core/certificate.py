@@ -58,6 +58,10 @@ class Certificate:
     feasible: bool
     objective_kind: str = "energy"
     warm_started: bool = False    # branch-and-bound seeded with a cached UB
+    # which search engine produced this certificate ("vectorized" frontier
+    # engine or the "reference" DFS); pre-engine artifacts default to
+    # "reference", which is what they were solved with
+    engine: str = "reference"
 
     @property
     def gap(self) -> float:
@@ -72,7 +76,7 @@ class Certificate:
                 f"nodes={self.nodes_explored} pruned={self.nodes_pruned} "
                 f"combos_skipped={self.combos_skipped} "
                 f"space={self.space_size:.3g} t={self.solve_time_s:.3f}s "
-                f"mode={self.spatial_mode}")
+                f"mode={self.spatial_mode} engine={self.engine}")
 
 
 def check_constraints(gemm: Gemm, m: Mapping, hw: AcceleratorSpec,

@@ -8,6 +8,14 @@ VMEM-resident between consecutive grid steps; its z-walk is the classic
 accumulate-in-VMEM schedule, derived here from the paper's geometry
 instead of folklore.
 
+The plan's structure also drives the Mosaic compiler hints: m/n grid
+dimensions touch disjoint output blocks and are declared "parallel"
+(Mosaic may reorder/parallelize them), while k carries the accumulator
+and is "arbitrary" (sequential), in the plan's grid order.  When the
+plan has no k tiling (nk == 1) each block's dot is complete, so the
+VMEM accumulator scratch and the flush epilogue are skipped entirely
+and the dot is written straight to the output block.
+
 Validated against ref.matmul_ref in interpret mode (CPU) over a
 shape/dtype sweep; compiled path targets real TPUs unchanged.
 """
@@ -21,6 +29,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.tpu_mapping import TpuTilePlan
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams", None)
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_axis: int | None,
@@ -37,6 +49,14 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_axis: int | None,
     @pl.when(k == nk - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _matmul_kernel_single_k(a_ref, b_ref, o_ref):
+    # nk == 1: the block dot is the whole reduction — no accumulator
+    # scratch, no init/flush branches
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
 
 
 def goma_matmul(a: jnp.ndarray, b: jnp.ndarray, plan: TpuTilePlan,
@@ -61,7 +81,19 @@ def goma_matmul(a: jnp.ndarray, b: jnp.ndarray, plan: TpuTilePlan,
     def o_map(*idx):
         return (idx[pos["m"]], idx[pos["n"]])
 
-    kernel = functools.partial(_matmul_kernel, k_axis=k_axis, nk=nk)
+    kwargs = {}
+    if _CompilerParams is not None:
+        # m/n blocks are independent (parallel); k is the sequential
+        # reduction walk — ordered per the plan's grid order
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=tuple(
+                "arbitrary" if g == "k" else "parallel" for g in order))
+    if nk == 1:
+        kernel = _matmul_kernel_single_k
+        scratch = []
+    else:
+        kernel = functools.partial(_matmul_kernel, k_axis=k_axis, nk=nk)
+        scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -69,6 +101,7 @@ def goma_matmul(a: jnp.ndarray, b: jnp.ndarray, plan: TpuTilePlan,
                   pl.BlockSpec((bk, bn), b_map)],
         out_specs=pl.BlockSpec((bm, bn), o_map),
         out_shape=jax.ShapeDtypeStruct((pm, pn), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=scratch,
         interpret=interpret,
+        **kwargs,
     )(a, b)

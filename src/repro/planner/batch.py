@@ -32,6 +32,7 @@ from ..core.energy import analytical_energy
 from ..core.geometry import Gemm
 from ..core.hardware import AcceleratorSpec
 from ..core.solver import SOLVER_VERSION, SolveResult, solve
+from ..core.solver import solve_many as core_solve_many
 from ..core.workloads import LlmSpec, scenario_gemms
 from .manifest import ManifestEntry, ModelMappingManifest
 from .store import PlanEntry, PlanKey, PlanStore, plan_key
@@ -132,18 +133,32 @@ def solve_many(tasks: Sequence[_SolveTask], *,
     Returns {digest: Certificate}.  jobs None/0 -> os.cpu_count(); 1 ->
     sequential in-process (identical results by construction: each task
     is an independent exact solve).
+
+    The sequential path goes through ``core.solver.solve_many`` (the
+    tasks duck-type its request protocol), which shares the process-level
+    axis-candidate memo: scenario shapes repeat d_model/d_ff extents, so
+    per-axis candidate construction happens once per distinct axis for
+    the whole batch.  The pool path sorts tasks by GEMM extents and hands
+    each worker one contiguous chunk, so neighboring shapes land in the
+    same worker's memo.
     """
     if jobs is None or jobs <= 0:
         jobs = os.cpu_count() or 1
     if jobs == 1 or len(tasks) <= 1:
-        return dict(_solve_task(t) for t in tasks)
+        results = core_solve_many(tasks)
+        return {t.digest: res.certificate
+                for t, res in zip(tasks, results)}
     out: dict[str, object] = {}
     # spawn, not fork: the parent typically has jax (multithreaded)
     # loaded; workers only ever import numpy-level repro.core
     ctx = multiprocessing.get_context("spawn")
+    tasks = sorted(tasks, key=lambda t: t.gemm.dims)
+    # ~4 chunks per worker: contiguous enough for memo locality, small
+    # enough that one slow chunk doesn't serialize the tail
+    chunk = max(1, -(-len(tasks) // (jobs * 4)))
     with concurrent.futures.ProcessPoolExecutor(max_workers=jobs,
                                                 mp_context=ctx) as pool:
-        for digest, cert in pool.map(_solve_task, tasks):
+        for digest, cert in pool.map(_solve_task, tasks, chunksize=chunk):
             out[digest] = cert
     return out
 

@@ -150,6 +150,7 @@ def certificate_to_json(c: Certificate) -> dict:
         "feasible": c.feasible,
         "objective_kind": c.objective_kind,
         "warm_started": c.warm_started,
+        "engine": c.engine,
     }
 
 
@@ -165,7 +166,8 @@ def certificate_from_json(d: dict) -> Certificate:
         space_size=d["space_size"], solve_time_s=d["solve_time_s"],
         spatial_mode=d["spatial_mode"], feasible=d["feasible"],
         objective_kind=d.get("objective_kind", "energy"),
-        warm_started=d.get("warm_started", False))
+        warm_started=d.get("warm_started", False),
+        engine=d.get("engine", "reference"))
 
 
 @dataclasses.dataclass(frozen=True)

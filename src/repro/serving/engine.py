@@ -66,9 +66,23 @@ class Engine:
             return len(shapes)
         return prewarm_tpu_plans(shapes, store, dtype_bytes=dtype_bytes)
 
+    # With a stop token set, the all-rows-done early exit is checked only
+    # every this many steps: each check is a device->host sync that
+    # serializes the decode stream, so checking sparsely keeps the device
+    # ahead of the host at the cost of <= STOP_CHECK_EVERY - 1 extra
+    # (stop-token-padded) decode steps after the batch finishes.
+    STOP_CHECK_EVERY = 4
+
     def generate(self, tokens: np.ndarray, *, extra_batch: dict | None
                  = None, rng: jax.Array | None = None) -> np.ndarray:
-        """tokens: (B, S) right-padded prompt batch; returns (B, new)."""
+        """tokens: (B, S) right-padded prompt batch; returns (B, new).
+
+        The decode loop keeps all bookkeeping (emitted tokens, per-row
+        done flags) on device: no host sync happens per step — only the
+        sparse stop-token early-exit check (see STOP_CHECK_EVERY) and
+        one final transfer of the output buffer.  Rows that hit the stop
+        token are padded with it; columns after the early exit are 0.
+        """
         cfg = self.cfg
         B, S = tokens.shape
         batch = {"tokens": jnp.asarray(tokens)}
@@ -80,21 +94,23 @@ class Engine:
             if extra_batch and k in extra_batch and \
                     self.model.cfg.family == "vlm":
                 prefix = extra_batch[k].shape[1]
-        out = np.zeros((B, cfg.max_new_tokens), np.int32)
+        out = jnp.zeros((B, cfg.max_new_tokens), jnp.int32)
         cur = self._sample(logits[:, -1], rng)
-        done = np.zeros((B,), bool)
+        done = jnp.zeros((B,), bool)
+        fill = jnp.int32(cfg.stop_token or 0)
         for t in range(cfg.max_new_tokens):
-            out[:, t] = np.where(done, cfg.stop_token or 0,
-                                 np.asarray(cur))
+            out = out.at[:, t].set(jnp.where(done, fill, cur))
             if cfg.stop_token is not None:
-                done |= np.asarray(cur) == cfg.stop_token
-                if done.all():
+                done = done | (cur == cfg.stop_token)
+                last = t == cfg.max_new_tokens - 1
+                if (t % self.STOP_CHECK_EVERY == self.STOP_CHECK_EVERY - 1
+                        or last) and bool(done.all()):
                     break
             idx = jnp.asarray(prefix + S + t, jnp.int32)
             logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(cur)[:, None], idx)
+                                         cur[:, None], idx)
             cur = self._sample(logits[:, -1], rng)
-        return out
+        return np.asarray(out)
 
     def _sample(self, logits, rng):
         if self.cfg.temperature <= 0.0 or rng is None:

@@ -1,0 +1,176 @@
+"""Differential equality of the two exact-solver engines.
+
+The vectorized frontier engine (core/solver.py, default) must be
+*bit-identical* to the reference DFS — same optimum objective, same
+mapping, same zero-gap certificate — on every shape: the frontier
+engine replays the DFS's incumbent-acceptance sequence exactly, and
+this corpus is the gate that keeps that claim honest.  Covers both
+objectives, all three spatial modes, bypass on/off, walk restriction,
+and warm-start incumbents (valid, exact, and over-tight ones that must
+trigger the cold re-solve)."""
+import numpy as np
+import pytest
+
+from repro.core import Gemm, TEMPLATES
+from repro.core.hardware import AcceleratorSpec, Ert
+from repro.core.solver import (SolveRequest, axis_cache_stats,
+                               clear_axis_cache, solve, solve_many)
+
+ERT = Ert(dram_read=200.0, dram_write=200.0, sram_read=6.0, sram_write=6.5,
+          rf_read=1.0, rf_write=1.1, macc=2.0, sram_leak=0.1,
+          rf_leak=0.001)
+
+
+def tiny_hw(npe, sram, rf, **kw):
+    return AcceleratorSpec(name=f"tiny{npe}", sram_words=sram, rf_words=rf,
+                           num_pe=npe, ert=ERT, **kw)
+
+
+# (gemm, hw, solve kwargs) — one row per structural feature under test
+CORPUS = [
+    # objective=energy, spatial equality (paper default)
+    (Gemm(4, 4, 4), tiny_hw(4, 48, 6), {}),
+    (Gemm(4, 6, 4), tiny_hw(4, 64, 8), {}),
+    (Gemm(9, 3, 3), tiny_hw(9, 60, 9), {}),
+    (Gemm(64, 48, 36), tiny_hw(16, 2048, 32), {}),
+    # allow_bypass off
+    (Gemm(8, 4, 4), tiny_hw(4, 96, 6, allow_bypass=False), {}),
+    # objective=edp under spatial_mode=le
+    (Gemm(4, 4, 4), tiny_hw(4, 48, 6, spatial_equality=False),
+     dict(objective="edp", spatial_mode="le")),
+    (Gemm(8, 8, 8), tiny_hw(4, 96, 8),
+     dict(objective="edp", spatial_mode="le")),
+    (Gemm(64, 48, 36), tiny_hw(16, 2048, 32),
+     dict(objective="edp", spatial_mode="le")),
+    (Gemm(12, 10, 6), tiny_hw(8, 128, 12),
+     dict(objective="edp", spatial_mode="le")),
+    # equality infeasible (prime dims): documented edp/le fallback
+    (Gemm(5, 7, 3), tiny_hw(4, 64, 8), {}),
+    # fixed spatial fanout (the TPU/MXU shape of the space)
+    (Gemm(16, 16, 16), tiny_hw(16, 4096, 64, fixed_spatial=(4, 4, 1),
+                               allow_bypass=False), {}),
+    # walking-axis restriction (the Pallas realizability constraint)
+    (Gemm(8, 8, 8), tiny_hw(4, 96, 8), dict(allowed_walk01=("z",))),
+    # energy objective explicitly under le
+    (Gemm(8, 8, 8), tiny_hw(4, 96, 8, spatial_equality=False),
+     dict(spatial_mode="le")),
+]
+
+
+def assert_engines_identical(gemm, hw, **kw):
+    ref = solve(gemm, hw, engine="reference", **kw)
+    vec = solve(gemm, hw, engine="vectorized", **kw)
+    cr, cv = ref.certificate, vec.certificate
+    assert cr.feasible == cv.feasible
+    assert cr.spatial_mode == cv.spatial_mode
+    assert cr.objective_kind == cv.objective_kind
+    # bit-identical optimum and zero-gap certificate
+    assert cr.objective == cv.objective
+    assert cr.upper_bound == cv.upper_bound
+    assert cr.lower_bound == cv.lower_bound
+    if cr.feasible:
+        assert cr.gap == 0.0 and cv.gap == 0.0
+        assert ref.mapping == vec.mapping
+    assert cr.engine == "reference" and cv.engine == "vectorized"
+    return ref, vec
+
+
+@pytest.mark.parametrize("gemm,hw,kw", CORPUS,
+                         ids=[f"{g.dims}-{h.name}-{i}"
+                              for i, (g, h, kw) in enumerate(CORPUS)])
+def test_differential_corpus(gemm, hw, kw):
+    assert_engines_identical(gemm, hw, **kw)
+
+
+def test_differential_realistic_templates():
+    """One realistic GEMM per paper template, both objectives."""
+    gemm = Gemm(512, 768, 640)
+    for name in ("eyeriss-like", "gemmini-like"):
+        hw = TEMPLATES[name]
+        assert_engines_identical(gemm, hw)
+        assert_engines_identical(gemm, hw, objective="edp",
+                                 spatial_mode="le")
+
+
+def test_infeasible_instance_identical():
+    # regfile too small for any residency: both engines report infeasible
+    hw = tiny_hw(4, 2, 1, allow_bypass=False)
+    ref, vec = assert_engines_identical(Gemm(8, 8, 8), hw)
+    assert not ref.certificate.feasible
+    assert ref.mapping is None and vec.mapping is None
+
+
+@pytest.mark.parametrize("engine", ["reference", "vectorized"])
+def test_warm_start_incumbents(engine):
+    gemm, hw = Gemm(8, 8, 8), tiny_hw(4, 96, 8)
+    base = solve(gemm, hw, engine=engine)
+    opt = base.certificate.objective
+    # a valid (loose) incumbent must not change the optimum
+    loose = solve(gemm, hw, incumbent=opt * 1.5, engine=engine)
+    assert loose.certificate.objective == opt
+    assert loose.certificate.warm_started
+    # an exact incumbent (re-planning an identical neighbor) still finds it
+    exact = solve(gemm, hw, incumbent=opt, engine=engine)
+    assert exact.certificate.objective == opt
+    # an over-tight incumbent prunes everything -> transparent cold
+    # re-solve, same optimum, not marked warm-started
+    tight = solve(gemm, hw, incumbent=opt * 0.5, engine=engine)
+    assert tight.certificate.objective == opt
+    assert not tight.certificate.warm_started
+
+
+def test_warm_start_cross_engine_identical():
+    gemm, hw = Gemm(64, 48, 36), tiny_hw(16, 2048, 32)
+    opt = solve(gemm, hw).certificate.objective
+    for inc in (opt * 1.25, opt, opt * 0.5):
+        assert_engines_identical(gemm, hw, incumbent=inc)
+
+
+def test_solve_many_shares_axis_cache():
+    hw = tiny_hw(16, 2048, 32)
+    # shapes sharing the y/z extents, as a scenario sweep does
+    reqs = [SolveRequest(gemm=Gemm(m, 48, 36), hw=hw)
+            for m in (16, 32, 64, 128)]
+    clear_axis_cache()
+    results = solve_many(reqs)
+    stats = axis_cache_stats()
+    assert stats["hits"] > 0          # y/z axes reused across solves
+    for r, req in zip(results, reqs):
+        one = solve(req.gemm, hw)
+        assert one.certificate.objective == r.certificate.objective
+        assert one.mapping == r.mapping
+
+
+def test_engine_recorded_and_default():
+    gemm, hw = Gemm(4, 4, 4), tiny_hw(4, 48, 6)
+    assert solve(gemm, hw).certificate.engine == "vectorized"
+    with pytest.raises(ValueError):
+        solve(gemm, hw, engine="nope")
+
+
+def test_certificate_engine_roundtrips_through_store(tmp_path):
+    from repro.planner.store import PlanEntry, PlanStore, plan_key
+    gemm, hw = Gemm(4, 4, 4), tiny_hw(4, 48, 6)
+    res = solve(gemm, hw)
+    key = plan_key(gemm, hw)
+    store = PlanStore(tmp_path)
+    store.put(PlanEntry.from_solve(key, res.certificate, hw))
+    reread = PlanStore(tmp_path).get(key)
+    assert reread.certificate.engine == "vectorized"
+    assert reread.certificate.objective == res.certificate.objective
+
+
+def test_random_shapes_fuzz():
+    """Randomized differential sweep across shapes/capacities/modes."""
+    import random
+    rng = random.Random(7)
+    dims = [2, 3, 4, 6, 8, 9, 12, 16, 18, 24]
+    for _ in range(12):
+        gemm = Gemm(rng.choice(dims), rng.choice(dims), rng.choice(dims))
+        hw = tiny_hw(rng.choice([4, 8, 16]),
+                     rng.choice([64, 256, 1024]),
+                     rng.choice([4, 8, 16, 32]),
+                     allow_bypass=rng.random() < 0.7)
+        kw = ({} if rng.random() < 0.5
+              else dict(objective="edp", spatial_mode="le"))
+        assert_engines_identical(gemm, hw, **kw)

@@ -118,6 +118,28 @@ def test_serving_engine_deterministic(tiny_setup):
     assert (out1 >= 0).all() and (out1 < cfg.vocab).all()
 
 
+def test_serving_engine_stop_token(tiny_setup):
+    """Device-side done/fill bookkeeping: a row that hits the stop token
+    keeps its greedy prefix and is stop-token-padded afterwards, while a
+    row that never stops decodes exactly as without a stop token (done
+    only masks the output write, not the decode input)."""
+    cfg, model, params, *_ = tiny_setup
+    prompts = np.array([[1, 2, 3, 4], [7, 8, 9, 10]], np.int32)
+    base = Engine(model, params, ServeConfig(
+        max_new_tokens=8, cache_len=64)).generate(prompts)
+    k = 2
+    stop = int(base[0, k])      # force row 0 to finish at step k
+    assert stop not in base[1]  # row 1 must run the full budget
+    out = Engine(model, params, ServeConfig(
+        max_new_tokens=8, cache_len=64,
+        stop_token=stop)).generate(prompts)
+    # row 0: unchanged greedy prefix, then stop-token padding
+    np.testing.assert_array_equal(out[0, :k], base[0, :k])
+    assert (out[0, k:] == stop).all(), out[0]
+    # row 1 never stops -> no early exit, bit-identical decode
+    np.testing.assert_array_equal(out[1], base[1])
+
+
 def test_grad_compression_numerics():
     """Error-feedback int8 all-reduce approximates the exact mean and the
     residual shrinks the bias across steps."""
