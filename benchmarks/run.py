@@ -18,6 +18,8 @@ Suites:
              (EXPERIMENTS.md §Planner)
   solver     engine A/B (vectorized frontier vs reference DFS) ->
              BENCH_solver.json perf-trajectory artifact at the repo root
+  serving    continuous-batching vs static-batch traffic replay ->
+             BENCH_serving.json artifact at the repo root
 """
 from __future__ import annotations
 
@@ -87,6 +89,9 @@ def main() -> None:
     if on("solver"):
         import bench_solver
         guarded("solver", lambda: bench_solver.run())
+    if on("serving"):
+        import bench_serving
+        guarded("serving", lambda: bench_serving.run())
     if on("roofline"):
         try:
             import bench_roofline

@@ -72,6 +72,22 @@ ENGINES = ("vectorized", "reference")
 # Process default; overridable per call or via $GOMA_SOLVER_ENGINE.
 DEFAULT_ENGINE = os.environ.get("GOMA_SOLVER_ENGINE", "vectorized")
 
+# Process-level invocation counter: lets callers assert zero-solve
+# properties (e.g. the serving scheduler's steady state runs entirely
+# from the plan database — tests/test_serving_sched.py).  ``solve_many``
+# routes through ``solve``, so one counter covers both entry points.
+_SOLVE_STATS = {"calls": 0}
+
+
+def solver_stats() -> dict:
+    """Snapshot of process-level solver counters ({"calls": n})."""
+    return dict(_SOLVE_STATS)
+
+
+def reset_solver_stats() -> None:
+    _SOLVE_STATS["calls"] = 0
+
+
 _BIG = 1 << 62          # "no threshold" sentinel (larger than any l1/l3)
 # x*y join sizes at or below this run the per-node DFS instead of the
 # bulk join (numpy call overhead dominates tiny joins)
@@ -665,6 +681,7 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
     pairs for the frontier engine vs z-visits for the DFS.
     """
     t0 = time.perf_counter()
+    _SOLVE_STATS["calls"] += 1
     eng = engine if engine is not None else DEFAULT_ENGINE
     if eng not in ENGINES:
         raise ValueError(f"unknown engine {eng!r}; expected one of {ENGINES}")

@@ -1,6 +1,14 @@
 """Serving driver: batched generation with any --arch.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke
+
+Two modes:
+  * static (default): one batch of identical-arrival prompts through
+    ``Engine.generate``, run to completion.
+  * ``--continuous``: the continuous-batching scheduler
+    (``repro.serving.sched``) replaying a synthetic Poisson trace —
+    chunked prefill interleaved with in-flight decode, slot recycling,
+    per-request streaming.  Dense/MoE archs only.
 """
 from __future__ import annotations
 
@@ -25,6 +33,13 @@ def main() -> None:
     ap.add_argument("--plan-db", default=None,
                     help="GOMA plan database dir: prewarm kernel tilings "
                          "through the store (also: $GOMA_PLAN_DB)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching scheduler over a Poisson "
+                         "trace instead of one static batch")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="--continuous: synthetic trace length")
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    help="--continuous: Poisson arrivals per second")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -34,6 +49,11 @@ def main() -> None:
     if args.plan_db:
         from repro.planner import PlanStore
         store = PlanStore(args.plan_db)
+
+    if args.continuous:
+        _serve_continuous(args, cfg, model, params, store)
+        return
+
     eng = Engine(model, params, ServeConfig(
         max_new_tokens=args.new_tokens, temperature=args.temperature,
         cache_len=args.prompt_len + args.new_tokens + 8),
@@ -65,6 +85,44 @@ def main() -> None:
     print(f"{cfg.name}: generated {out.shape} in {dt:.2f}s "
           f"({tok_s:.1f} tok/s incl. compile)")
     print(out[:, :12])
+
+
+def _serve_continuous(args, cfg, model, params, store) -> None:
+    from repro.serving.sched import (BucketSpec, ContinuousScheduler,
+                                     SchedConfig, TraceClock,
+                                     TrafficConfig, poisson_trace, replay)
+    widths = (8, 32)
+    # every trace prompt is <= prompt_len; its bucket-padded prefill
+    # fits in ceil(prompt_len / max_width) full-width chunks
+    wmax = BucketSpec(widths).max_width
+    padded_cap = -(-args.prompt_len // wmax) * wmax
+    cache_len = padded_cap + args.new_tokens
+    eng = Engine(model, params, ServeConfig(
+        max_new_tokens=args.new_tokens, temperature=args.temperature,
+        cache_len=cache_len), plan_store=store)
+    trace = poisson_trace(TrafficConfig(
+        n_requests=args.requests, arrival_rate=args.arrival_rate,
+        prompt_mix=((max(args.prompt_len // 4, 1), args.prompt_len, 1.0),),
+        max_new_tokens=args.new_tokens, vocab=cfg.vocab))
+    clock = TraceClock()
+    sched = ContinuousScheduler(
+        eng, SchedConfig(slots=args.batch, chunk_widths=widths,
+                         temperature=args.temperature),
+        arch_id=args.arch if store is not None else None,
+        clock=clock.now)
+    if store is not None:
+        print(f"plan prewarm: {sched.prewarmed_plans} GEMM tilings  "
+              f"store={store.stats()}")
+    results = replay(sched, trace, clock)
+    summ = sched.metrics.summary()
+    print(f"{cfg.name} continuous: {len(results)} requests, "
+          f"{summ['total_generated_tokens']} tokens in "
+          f"{summ['elapsed_s']:.2f}s trace-time "
+          f"({summ['tokens_per_s']:.1f} tok/s incl. compile)")
+    print(f"  ttft p50/p95: {summ['ttft_p50_s']:.3f}/"
+          f"{summ['ttft_p95_s']:.3f}s  occupancy: "
+          f"{summ['mean_slot_occupancy']:.2f}  chunks: "
+          f"{summ['prefill_chunks']}")
 
 
 if __name__ == "__main__":

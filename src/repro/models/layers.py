@@ -223,7 +223,19 @@ def attention_apply(p: Params, x: jnp.ndarray, *,
         kv_positions = jnp.arange(k.shape[1])
         new_cache = cache
     elif cache is not None:
-        if cache_index is not None:
+        if cache_index is not None and \
+                getattr(cache_index, "ndim", 0) == 1:
+            # slot-indexed write: each batch row has its own position
+            # (continuous-batching decode, serving/sched) — per-row
+            # dynamic_update_slice via vmap, per-row valid-length mask
+            def _row(c, u, i):
+                return jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+            k_all = jax.vmap(_row)(
+                cache["k"], k.astype(cache["k"].dtype), cache_index)
+            v_all = jax.vmap(_row)(
+                cache["v"], v.astype(cache["v"].dtype), cache_index)
+            kv_len = cache_index + S                     # (B,)
+        elif cache_index is not None:
             k_all = jax.lax.dynamic_update_slice(
                 cache["k"], k.astype(cache["k"].dtype),
                 (0, cache_index, 0, 0))
@@ -244,7 +256,7 @@ def attention_apply(p: Params, x: jnp.ndarray, *,
         new_cache = None
 
     kv_len_arr = (None if kv_len is None
-                  else jnp.asarray(kv_len, jnp.int32).reshape(1))
+                  else jnp.asarray(kv_len, jnp.int32).reshape(-1))
     out = flash_attention(q, k, v, q_positions=q_positions,
                           kv_positions=kv_positions, causal=causal,
                           window=window, window_active=window_active,

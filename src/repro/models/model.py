@@ -425,10 +425,25 @@ class Model:
         return logits, new_caches
 
     def decode_step(self, params, cache, tokens, index):
-        """tokens: (B,1); index: scalar int32 write position."""
+        """One cache-resident step: single tokens, chunks, or slots.
+
+        tokens: (B, S) — S == 1 is the classic decode step; S > 1 is a
+        chunked-prefill continuation (the chunk is written to the cache
+        at [index, index+S) with causal self-attention over cache+chunk).
+        index: scalar int32 write position shared by all rows, or an
+        int32 (B,) vector of per-row positions (slot-indexed decode for
+        the continuous-batching scheduler; attention masks each row at
+        its own valid length).
+        """
         cfg = self.cfg
         x = self._embed_in(params, tokens, None)
-        pos = jnp.full((tokens.shape[0], 1), index, jnp.int32)
+        B, S = tokens.shape
+        index = jnp.asarray(index, jnp.int32)
+        offs = jnp.arange(S, dtype=jnp.int32)
+        if index.ndim == 1:
+            pos = index[:, None] + offs[None, :]         # (B, S)
+        else:
+            pos = jnp.broadcast_to(index + offs, (B, S))
         if cfg.family == "encdec":
             x, new_l = self._decode_stack_encdec(
                 params, x, cache["enc_out"], pos,

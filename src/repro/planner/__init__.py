@@ -19,14 +19,20 @@ Read-through consumers: ``core.tpu_mapping.plan_gemm_tiling`` (hence
 ``kernels.ops.gemm`` / ``kernels.goma_gemm``) and ``serving.Engine``
 (plan prewarming).  See DESIGN.md §Planner.
 """
-from .batch import (BatchPlanner, BatchReport, cached_solve,
-                    prewarm_tpu_plans, tile_plan_from_store)
+from .batch import (BatchPlanner, BatchReport,
+                    bucketed_serving_plan_shape_groups,
+                    bucketed_serving_plan_shapes, cached_solve,
+                    flatten_shape_groups, prewarm_tpu_plans,
+                    serving_plan_shapes, tile_plan_from_store)
 from .manifest import ManifestEntry, ModelMappingManifest
 from .store import (PlanEntry, PlanKey, PlanStore, plan_key,
                     resolve_default_store)
 
 __all__ = [
     "BatchPlanner", "BatchReport", "ManifestEntry", "ModelMappingManifest",
-    "PlanEntry", "PlanKey", "PlanStore", "cached_solve", "plan_key",
-    "prewarm_tpu_plans", "resolve_default_store", "tile_plan_from_store",
+    "PlanEntry", "PlanKey", "PlanStore",
+    "bucketed_serving_plan_shape_groups", "bucketed_serving_plan_shapes",
+    "cached_solve", "flatten_shape_groups", "plan_key",
+    "prewarm_tpu_plans", "resolve_default_store", "serving_plan_shapes",
+    "tile_plan_from_store",
 ]

@@ -329,3 +329,59 @@ def serving_plan_shapes(arch_id: str, *, batch: int, prompt_len: int,
             seen.add(gemm.dims)
             shapes.append(gemm.dims)
     return shapes
+
+
+def bucketed_serving_plan_shape_groups(
+        arch_id: str, *, slots: int, chunk_widths: Sequence[int],
+        cache_len: int) -> dict[str, list[tuple[int, int, int]]]:
+    """Per-phase GEMM (M, N, K) shape groups of a continuous-batching
+    deployment (serving.sched): one group per prefill-chunk width plus
+    the slot-batched decode group.
+
+    A prefill chunk of width W on one sequence flattens to exactly the
+    GEMM set of a batch-W decode step against the same static cache —
+    M = W token rows for every projection, attention score/context
+    against cache_len — so both phases extract through
+    ``arch_decode_gemms`` and the total plan-key count is bounded by
+    #chunk_widths + 1, independent of traffic.
+    """
+    from ..core.workloads import arch_decode_gemms
+
+    def dedup(rows):
+        out, seen = [], set()
+        for _, gemm, _ in rows:
+            if gemm.dims not in seen:
+                seen.add(gemm.dims)
+                out.append(gemm.dims)
+        return out
+
+    groups = {
+        f"chunk{w}": dedup(arch_decode_gemms(arch_id, batch=w,
+                                             cache_len=cache_len))
+        for w in chunk_widths}
+    groups["decode"] = dedup(arch_decode_gemms(arch_id, batch=slots,
+                                               cache_len=cache_len))
+    return groups
+
+
+def flatten_shape_groups(
+        groups: dict[str, list[tuple[int, int, int]]]
+        ) -> list[tuple[int, int, int]]:
+    """Deduplicated union of per-phase shape groups, first-seen order."""
+    shapes, seen = [], set()
+    for group in groups.values():
+        for dims in group:
+            if dims not in seen:
+                seen.add(dims)
+                shapes.append(dims)
+    return shapes
+
+
+def bucketed_serving_plan_shapes(
+        arch_id: str, *, slots: int, chunk_widths: Sequence[int],
+        cache_len: int) -> list[tuple[int, int, int]]:
+    """Flat deduplicated union of ``bucketed_serving_plan_shape_groups``
+    — the prewarm set for a continuous-batching scheduler."""
+    return flatten_shape_groups(bucketed_serving_plan_shape_groups(
+        arch_id, slots=slots, chunk_widths=chunk_widths,
+        cache_len=cache_len))

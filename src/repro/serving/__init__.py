@@ -1,3 +1,7 @@
 from .engine import Engine, ServeConfig
 
 __all__ = ["Engine", "ServeConfig"]
+
+# The continuous-batching scheduler lives in ``repro.serving.sched``
+# (imported lazily by consumers; not re-exported here to keep the
+# static-engine import path free of scheduler dependencies).

@@ -5,6 +5,14 @@ static-shape KV/state caches, batched requests with per-row lengths
 (ragged prefill via right-padding + masked positions), and a
 stop-token / max-token policy.  Used by examples/serve_lm.py and the
 serving integration test.
+
+Beyond the static ``generate`` loop, the engine exposes its *step-level*
+primitives — ``new_cache`` / ``prefill_chunk`` / ``decode_slots`` /
+``insert_row`` / ``sample`` — which the continuous-batching scheduler
+(``serving.sched``) composes into an admission/prefill/decode loop.  All
+of them route through the single jitted ``model.decode_step``, so the
+number of distinct compiled programs is bounded by the number of chunk
+widths in use (see sched.BucketSpec), not by traffic.
 """
 from __future__ import annotations
 
@@ -26,6 +34,23 @@ class ServeConfig:
     cache_len: int = 512
 
 
+def gumbel_argmax(logits, temperature: float, key):
+    """Temperature sampling as Gumbel-max over the last axis — the one
+    sampling implementation shared by the static engine and the
+    continuous scheduler (token-identity depends on them agreeing)."""
+    g = jax.random.gumbel(key, logits.shape)
+    return jnp.argmax(logits / temperature + g, axis=-1).astype(jnp.int32)
+
+
+def _insert_row(slot_cache, row_cache, slot):
+    """Write a freshly prefilled B=1 cache row into slot `slot` of the
+    slot-batched cache (batch is axis 1 of every KV leaf)."""
+    return jax.tree.map(
+        lambda big, small: jax.lax.dynamic_update_index_in_dim(
+            big, small[:, 0].astype(big.dtype), slot, axis=1),
+        slot_cache, row_cache)
+
+
 class Engine:
     def __init__(self, model: Model, params, cfg: ServeConfig, *,
                  plan_store=None):
@@ -37,7 +62,37 @@ class Engine:
         self.plan_store = plan_store
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len=cfg.cache_len))
+        # chunk-capable, slot-indexable (see model.decode_step); one
+        # compiled program per distinct (B, S) / index-rank signature
         self._decode = jax.jit(model.decode_step)
+        self._insert = jax.jit(_insert_row)
+
+    # ----------------------------------------------------- step-level API
+    def new_cache(self, batch: int):
+        """Fresh static cache for `batch` rows at cfg.cache_len."""
+        return self.model.init_cache(batch, self.cfg.cache_len)
+
+    def prefill_chunk(self, cache, tokens, index):
+        """Run one prefill chunk (B, W) at scalar write position `index`
+        against an existing cache; returns (logits (B, W, V), cache)."""
+        return self._decode(self.params, cache, jnp.asarray(tokens),
+                            jnp.asarray(index, jnp.int32))
+
+    def decode_slots(self, cache, tokens, positions):
+        """One decode step with per-row write positions (B,); rows are
+        fully independent — inactive slots may carry garbage, their
+        writes land below/at their own positions only."""
+        return self._decode(self.params, cache, jnp.asarray(tokens),
+                            jnp.asarray(positions, jnp.int32))
+
+    def insert_row(self, slot_cache, row_cache, slot: int):
+        """Graft a B=1 prefill cache into row `slot` of the slot cache."""
+        return self._insert(slot_cache, row_cache,
+                            jnp.asarray(slot, jnp.int32))
+
+    def sample(self, logits, rng):
+        """Greedy/temperature sampling (row-wise; rng may be None)."""
+        return self._sample(logits, rng)
 
     def prewarm_plans(self, arch_id: str, batch: int, prompt_len: int, *,
                       dtype_bytes: int | None = None) -> int:
@@ -50,13 +105,22 @@ class Engine:
         dtype_bytes defaults to the model's compute dtype — plan identity
         includes the dtype-rescaled VMEM capacity, so prewarming bf16
         plans for an f32 engine would all miss at dispatch time."""
-        from ..planner.batch import prewarm_tpu_plans, serving_plan_shapes
-        from ..planner.store import resolve_default_store
-        if dtype_bytes is None:
-            dtype_bytes = jnp.dtype(self.model.cfg.compute_dtype).itemsize
+        from ..planner.batch import serving_plan_shapes
         shapes = serving_plan_shapes(arch_id, batch=batch,
                                      prompt_len=prompt_len,
                                      cache_len=self.cfg.cache_len)
+        return self.prewarm_shapes(shapes, dtype_bytes=dtype_bytes)
+
+    def prewarm_shapes(self, shapes, *,
+                       dtype_bytes: int | None = None) -> int:
+        """Plan an explicit (M, N, K) shape list through the installed
+        store (or the in-process cache when none is).  Shared by
+        ``prewarm_plans`` and the scheduler's bucketed prewarm."""
+        from ..planner.batch import prewarm_tpu_plans
+        from ..planner.store import resolve_default_store
+        if dtype_bytes is None:
+            dtype_bytes = self.dispatch_dtype_bytes
+        shapes = list(shapes)
         store = (self.plan_store if self.plan_store is not None
                  else resolve_default_store())
         if store is None:
@@ -65,6 +129,24 @@ class Engine:
                 plan_gemm_tiling(*s, dtype_bytes=dtype_bytes)
             return len(shapes)
         return prewarm_tpu_plans(shapes, store, dtype_bytes=dtype_bytes)
+
+    @property
+    def dispatch_dtype_bytes(self) -> int:
+        """The dtype under which this engine's GEMMs dispatch (plan
+        identity includes the dtype-rescaled VMEM capacity)."""
+        return jnp.dtype(self.model.cfg.compute_dtype).itemsize
+
+    def validate_capacity(self, prompt_len: int, max_new_tokens: int, *,
+                          prefix_len: int = 0) -> None:
+        """Fail fast instead of silently overflowing the static cache:
+        every token of prompt + generation needs a cache position."""
+        need = prefix_len + prompt_len + max_new_tokens
+        if need > self.cfg.cache_len:
+            raise ValueError(
+                f"request needs {need} cache positions (prefix "
+                f"{prefix_len} + prompt {prompt_len} + max_new_tokens "
+                f"{max_new_tokens}) but cache_len={self.cfg.cache_len}; "
+                f"shorten the request or raise ServeConfig.cache_len")
 
     # With a stop token set, the all-rows-done early exit is checked only
     # every this many steps: each check is a device->host sync that
@@ -82,20 +164,29 @@ class Engine:
         sparse stop-token early-exit check (see STOP_CHECK_EVERY) and
         one final transfer of the output buffer.  Rows that hit the stop
         token are padded with it; columns after the early exit are 0.
+
+        With temperature > 0 the rng key is split per step
+        (``fold_in(rng, t)``), so each sampled token draws fresh Gumbel
+        noise; token t of a generation is reproducible from (rng, t)
+        alone.
         """
         cfg = self.cfg
         B, S = tokens.shape
-        batch = {"tokens": jnp.asarray(tokens)}
-        if extra_batch:
-            batch.update(extra_batch)
-        logits, cache = self._prefill(self.params, batch)
         prefix = 0
         for k in ("patches", "frames"):
             if extra_batch and k in extra_batch and \
                     self.model.cfg.family == "vlm":
                 prefix = extra_batch[k].shape[1]
+        self.validate_capacity(S, cfg.max_new_tokens, prefix_len=prefix)
+        batch = {"tokens": jnp.asarray(tokens)}
+        if extra_batch:
+            batch.update(extra_batch)
+        logits, cache = self._prefill(self.params, batch)
         out = jnp.zeros((B, cfg.max_new_tokens), jnp.int32)
-        cur = self._sample(logits[:, -1], rng)
+        step_rng = (None if rng is None
+                    else functools.partial(jax.random.fold_in, rng))
+        cur = self._sample(logits[:, -1],
+                           None if step_rng is None else step_rng(0))
         done = jnp.zeros((B,), bool)
         fill = jnp.int32(cfg.stop_token or 0)
         for t in range(cfg.max_new_tokens):
@@ -106,15 +197,17 @@ class Engine:
                 if (t % self.STOP_CHECK_EVERY == self.STOP_CHECK_EVERY - 1
                         or last) and bool(done.all()):
                     break
+            if t + 1 == cfg.max_new_tokens:
+                break               # budget spent: the next step's token
+            #                         would be discarded anyway
             idx = jnp.asarray(prefix + S + t, jnp.int32)
             logits, cache = self._decode(self.params, cache,
                                          cur[:, None], idx)
-            cur = self._sample(logits[:, -1], rng)
+            cur = self._sample(logits[:, -1],
+                               None if step_rng is None else step_rng(t + 1))
         return np.asarray(out)
 
     def _sample(self, logits, rng):
         if self.cfg.temperature <= 0.0 or rng is None:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        g = jax.random.gumbel(rng, logits.shape)
-        return jnp.argmax(logits / self.cfg.temperature + g,
-                          axis=-1).astype(jnp.int32)
+        return gumbel_argmax(logits, self.cfg.temperature, rng)

@@ -1,0 +1,81 @@
+"""Serving metrics: TTFT, per-token latency, throughput, occupancy.
+
+All timestamps come from the scheduler's injected clock (wall time in
+live serving, the virtual trace clock in replay), so the same metrics
+layer serves both the benchmark harness and production-style telemetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .requests import RequestResult
+
+
+def _pct(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs \
+        else float("nan")
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    """Accumulated over one scheduler run."""
+
+    results: list[RequestResult] = dataclasses.field(default_factory=list)
+    steps: int = 0                  # scheduler ticks
+    decode_steps: int = 0           # ticks that ran a decode batch
+    prefill_chunks: int = 0
+    padded_prefill_tokens: int = 0  # wasted positions from bucket padding
+    # per-tick slot occupancy samples (active slots / total slots)
+    occupancy_samples: list[float] = dataclasses.field(default_factory=list)
+    # decode-tick batch efficiency (active rows / slot count)
+    started_s: float = 0.0
+    finished_s: float = 0.0
+
+    def record_result(self, res: RequestResult) -> None:
+        self.results.append(res)
+
+    def record_tick(self, *, active: int, slots: int, decoded: bool,
+                    chunks: int, padded_tokens: int) -> None:
+        self.steps += 1
+        self.decode_steps += decoded
+        self.prefill_chunks += chunks
+        self.padded_prefill_tokens += padded_tokens
+        self.occupancy_samples.append(active / slots if slots else 0.0)
+
+    # ------------------------------------------------------------- summary
+    @property
+    def total_generated(self) -> int:
+        return sum(r.n_generated for r in self.results)
+
+    @property
+    def elapsed_s(self) -> float:
+        return max(self.finished_s - self.started_s, 1e-9)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_generated / self.elapsed_s
+
+    def summary(self) -> dict:
+        ttft = [r.ttft_s for r in self.results]
+        # per-token decode latency: generation span / tokens after the first
+        tpot = [(r.finish_s - r.first_token_s) / (r.n_generated - 1)
+                for r in self.results if r.n_generated > 1]
+        return {
+            "requests": len(self.results),
+            "total_generated_tokens": self.total_generated,
+            "elapsed_s": round(self.elapsed_s, 6),
+            "tokens_per_s": round(self.tokens_per_s, 3),
+            "ttft_p50_s": round(_pct(ttft, 50), 6),
+            "ttft_p95_s": round(_pct(ttft, 95), 6),
+            "tpot_p50_s": round(_pct(tpot, 50), 6),
+            "tpot_p95_s": round(_pct(tpot, 95), 6),
+            "steps": self.steps,
+            "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "padded_prefill_tokens": self.padded_prefill_tokens,
+            "mean_slot_occupancy": round(
+                float(np.mean(self.occupancy_samples))
+                if self.occupancy_samples else 0.0, 4),
+        }

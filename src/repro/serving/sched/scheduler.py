@@ -1,0 +1,339 @@
+"""Continuous-batching scheduler over the step-level serving engine.
+
+One ``ContinuousScheduler`` owns a fixed pool of decode slots backed by
+a single static slot-batched KV cache.  Each tick interleaves three
+phases — admission, chunked prefill, batched decode — so new requests
+join a running batch without draining it:
+
+  1. **Admission**: the oldest queued request claims a free slot (free
+     list, LIFO recycling) and becomes the in-flight prefill.
+  2. **Chunked prefill**: up to ``prefill_chunks_per_step`` bucketed
+     chunks (see ``buckets.BucketSpec``) of the in-flight request run
+     against a private B=1 cache.  When the last chunk completes, the
+     first token is sampled from its logits, the cache row is grafted
+     into the slot cache, and the slot joins the decode batch.
+  3. **Decode**: one slot-indexed decode step over all slots (inactive
+     rows compute garbage that per-row valid-length masking keeps
+     unreadable); each active slot samples its next token, streams it,
+     and is evicted on its stop token or token budget.
+
+Every jitted program the loop touches has a traffic-independent shape
+(slot count × chunk buckets), and with a plan store installed the same
+bucketing bounds the GEMM plan-key set — prewarmed at construction, so
+steady-state traffic resolves every kernel tiling with zero solver
+invocations (asserted via store/solver counters in the tests).
+
+Outputs are token-identical to running each request alone through the
+static ``Engine.generate`` oracle: chunk padding is causally masked,
+slot rows are batch-independent, and the decode recurrence visits the
+same (token, position) sequence — see tests/test_serving_sched.py.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..engine import Engine, gumbel_argmax
+from .buckets import BucketSpec, Chunk
+from .metrics import ServingMetrics
+from .requests import Request, RequestResult, RequestState
+from .slots import Slot, SlotManager
+
+# Families whose cache is a pure per-layer KV tensor with batch on axis 1
+# (slot grafting + slot-indexed writes assume that layout).  Recurrent
+# families (rwkv/ssm/hybrid) carry cross-step state that chunked prefill
+# cannot replay position-independently; encdec/vlm need frontend
+# prefixes the chunk loop does not thread through.
+SUPPORTED_FAMILIES = ("dense", "moe")
+
+
+@dataclasses.dataclass
+class SchedConfig:
+    slots: int = 8
+    chunk_widths: tuple[int, ...] = (8, 32, 128)
+    prefill_chunks_per_step: int = 1
+    max_queue: int | None = None        # admission control; None = unbounded
+    temperature: float = 0.0
+    stop_token: int | None = None       # default; requests may override
+    rng_seed: int = 0                   # per-request sampling keys
+    resolve_plans: bool = True          # resolve tile plans per tick when a
+    #                                     plan store is installed
+
+
+@dataclasses.dataclass
+class _Prefill:
+    """The in-flight chunked prefill (at most one at a time)."""
+
+    slot: Slot
+    cache: dict                          # the persistent B=1 prefill
+    #                                      cache, advanced chunk by chunk
+    chunks: collections.deque            # of Chunk
+    padded: np.ndarray                   # (1, padded_len) prompt buffer
+
+
+class ContinuousScheduler:
+    def __init__(self, engine: Engine, cfg: SchedConfig, *,
+                 arch_id: str | None = None,
+                 on_token: Callable[[Request, int], None] | None = None,
+                 on_finish: Callable[[RequestResult], None] | None = None,
+                 clock: Callable[[], float] | None = None):
+        fam = engine.model.cfg.family
+        if fam not in SUPPORTED_FAMILIES:
+            raise ValueError(
+                f"continuous batching supports families "
+                f"{SUPPORTED_FAMILIES}, not {fam!r} (recurrent state / "
+                f"frontend prefixes are not slot-graftable)")
+        if fam == "moe" and \
+                getattr(engine.model.cfg, "moe_dispatch", "dense") \
+                == "gathered":
+            # gathered dispatch computes expert capacity over the whole
+            # batch: garbage rows in free slots would compete with
+            # active rows for capacity, breaking row independence (and
+            # with it the token-identity-to-oracle guarantee)
+            raise ValueError(
+                "continuous batching requires row-independent compute; "
+                "moe_dispatch='gathered' couples rows through expert "
+                "capacity — use moe_dispatch='dense'")
+        self.engine = engine
+        self.cfg = cfg
+        self.buckets = BucketSpec(cfg.chunk_widths)
+        self.slots = SlotManager(cfg.slots)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.metrics = ServingMetrics()
+        self.results: list[RequestResult] = []
+        self.on_token = on_token
+        self.on_finish = on_finish
+        if clock is None:
+            t0 = time.perf_counter()
+            clock = lambda: time.perf_counter() - t0  # noqa: E731
+        self.clock = clock
+        self._base_key = jax.random.PRNGKey(cfg.rng_seed)
+        self._prefill: _Prefill | None = None
+        # one persistent B=1 prefill cache, reused across admissions:
+        # stale content from earlier occupants is invisible (causal +
+        # valid-length masking) and overwritten chunk by chunk — the
+        # same invariant that lets slot rows go uncleared
+        self._prefill_cache = engine.new_cache(1)
+        self.rejected = 0               # admission-control rejections
+        # device-side decode state: next input token + write position per
+        # slot (kept as host arrays; one transfer per tick)
+        self._cur = np.zeros((cfg.slots,), np.int32)
+        self._pos = np.zeros((cfg.slots,), np.int32)
+        self.slot_cache = engine.new_cache(cfg.slots)
+        # plan-store integration: prewarm every bucketed GEMM tiling now
+        # so steady-state traffic never invokes the solver
+        self.arch_id = arch_id
+        self._plan_groups: dict[str, list[tuple[int, int, int]]] = {}
+        self._resolved_groups: set[str] = set()
+        self.prewarmed_plans = 0
+        if arch_id is not None:
+            self.prewarmed_plans = self._prewarm(arch_id)
+
+    # ------------------------------------------------------------ plan DB
+    def _prewarm(self, arch_id: str) -> int:
+        from ...planner.batch import (bucketed_serving_plan_shape_groups,
+                                      flatten_shape_groups)
+        self._plan_groups = bucketed_serving_plan_shape_groups(
+            arch_id, slots=self.cfg.slots,
+            chunk_widths=self.buckets.chunk_widths,
+            cache_len=self.engine.cfg.cache_len)
+        return self.engine.prewarm_shapes(
+            flatten_shape_groups(self._plan_groups))
+
+    def _resolve_plans(self, group: str) -> None:
+        """Resolve the tile plans one phase dispatches, once per group
+        (first dispatch).  After the constructor's prewarm these are all
+        in-process cache hits — the zero-solve steady state."""
+        if group in self._resolved_groups or \
+                not (self.cfg.resolve_plans and self._plan_groups):
+            return
+        from ...core.tpu_mapping import plan_gemm_tiling
+        for (M, N, K) in self._plan_groups.get(group, ()):
+            plan_gemm_tiling(M, N, K,
+                             dtype_bytes=self.engine.dispatch_dtype_bytes)
+        self._resolved_groups.add(group)
+
+    # ---------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        """Validate and enqueue.  Raises ValueError when the request can
+        never fit the static cache (clear error instead of a silent
+        overflow) and RuntimeError when the queue is full."""
+        self.engine.validate_capacity(req.prompt_len, req.max_new_tokens)
+        padded = self.buckets.padded_len(req.prompt_len)
+        if padded > self.engine.cfg.cache_len:
+            raise ValueError(
+                f"request {req.req_id}: bucket-padded prompt needs "
+                f"{padded} cache positions but cache_len="
+                f"{self.engine.cfg.cache_len}")
+        if self.cfg.max_queue is not None and \
+                len(self.queue) >= self.cfg.max_queue:
+            self.rejected += 1
+            raise RuntimeError(
+                f"admission queue full ({self.cfg.max_queue}); request "
+                f"{req.req_id} rejected")
+        self.queue.append(req)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or self._prefill is not None or \
+            self.slots.n_busy > 0
+
+    def state_of(self, slot: Slot) -> RequestState:
+        if slot.free:
+            return RequestState.FINISHED
+        if self._prefill is not None and self._prefill.slot is slot:
+            return RequestState.PREFILLING
+        return RequestState.ACTIVE
+
+    # ------------------------------------------------------------ stepping
+    def step(self) -> None:
+        """One scheduler tick: admit -> prefill chunk(s) -> decode."""
+        if not self.metrics.steps:
+            self.metrics.started_s = self.clock()
+        chunks_run = 0
+        padded_tokens = 0
+
+        # 1. admission: start prefilling the oldest queued request
+        if self._prefill is None and self.queue and self.slots.n_free:
+            req = self.queue.popleft()
+            slot = self.slots.acquire(req)
+            if slot.stop_token is None:     # scheduler default, resolved
+                slot.stop_token = self.cfg.stop_token   # on the slot —
+            #                                 the Request is never mutated
+            padded_len = self.buckets.padded_len(req.prompt_len)
+            buf = np.zeros((1, padded_len), np.int32)
+            buf[0, :req.prompt_len] = req.tokens
+            self._prefill = _Prefill(
+                slot=slot, cache=self._prefill_cache,
+                chunks=collections.deque(
+                    self.buckets.plan_chunks(req.prompt_len)),
+                padded=buf)
+
+        # 2. chunked prefill of the in-flight request
+        budget = max(1, self.cfg.prefill_chunks_per_step)
+        while self._prefill is not None and budget > 0:
+            chunk: Chunk = self._prefill.chunks.popleft()
+            toks = self._prefill.padded[:, chunk.start:chunk.start
+                                        + chunk.width]
+            logits, self._prefill.cache = self.engine.prefill_chunk(
+                self._prefill.cache, toks, chunk.start)
+            chunks_run += 1
+            padded_tokens += chunk.width - chunk.n_real
+            budget -= 1
+            if not self._prefill.chunks:
+                self._activate(self._prefill, logits, chunk)
+                self._prefill = None
+            self._resolve_plans(f"chunk{chunk.width}")
+
+        # 3. slot-indexed decode over the whole pool
+        active = [s for s in self.slots.busy()
+                  if self._prefill is None or s is not self._prefill.slot]
+        decoded = False
+        if active:
+            decoded = True
+            tokens = jnp.asarray(self._cur[:, None])
+            positions = jnp.asarray(self._pos)
+            logits, self.slot_cache = self.engine.decode_slots(
+                self.slot_cache, tokens, positions)
+            nxt = self._sample_rows(logits[:, -1], active)
+            now = self.clock()
+            for slot in active:
+                tok = int(nxt[slot.idx])
+                self._pos[slot.idx] += 1
+                self._cur[slot.idx] = tok
+                slot.next_token = tok
+                self._emit(slot, tok, now)
+            self._resolve_plans("decode")
+
+        self.metrics.record_tick(
+            active=len(active), slots=len(self.slots), decoded=decoded,
+            chunks=chunks_run, padded_tokens=padded_tokens)
+        self.metrics.finished_s = self.clock()
+
+    def _activate(self, pf: _Prefill, logits, last_chunk: Chunk) -> None:
+        """Last chunk done: sample the first token, graft the row into
+        the slot cache, and join the decode batch."""
+        slot, req = pf.slot, pf.slot.req
+        row_logits = logits[0, last_chunk.n_real - 1]
+        tok = self._sample_one(row_logits, self._step_key(req, 0))
+        self.slot_cache = self.engine.insert_row(
+            self.slot_cache, pf.cache, slot.idx)
+        self._prefill_cache = pf.cache   # next admission reuses it
+        self._pos[slot.idx] = req.prompt_len
+        self._cur[slot.idx] = tok
+        slot.next_token = tok
+        self._emit(slot, tok, self.clock(), first=True)
+
+    def _emit(self, slot: Slot, tok: int, now: float,
+              first: bool = False) -> None:
+        req = slot.req
+        if first:
+            slot.first_token_s = now
+        slot.emitted += 1
+        slot.tokens.append(tok)
+        if self.on_token is not None:
+            self.on_token(req, tok)
+        stopped = slot.stop_token is not None and tok == slot.stop_token
+        if stopped or slot.emitted >= req.max_new_tokens:
+            res = RequestResult(
+                req_id=req.req_id, tokens=list(slot.tokens),
+                finish_reason="stop" if stopped else "length",
+                prompt_len=req.prompt_len, arrival_s=req.arrival_s,
+                first_token_s=slot.first_token_s, finish_s=now)
+            self.results.append(res)
+            self.metrics.record_result(res)
+            if self.on_finish is not None:
+                self.on_finish(res)
+            self.slots.release(slot)
+
+    # ------------------------------------------------------------ sampling
+    def _step_key(self, req: Request, token_idx: int):
+        if self.cfg.temperature <= 0.0:
+            return None
+        req_key = jax.random.fold_in(self._base_key, req.req_id)
+        return jax.random.fold_in(req_key, token_idx)
+
+    def _sample_one(self, row, key) -> int:
+        """Sample one token from a (V,) logits row under the scheduler's
+        own temperature (the engine's temperature knob is not consulted
+        anywhere in the continuous path)."""
+        if self.cfg.temperature <= 0.0 or key is None:
+            return int(jnp.argmax(row))
+        return int(gumbel_argmax(row, self.cfg.temperature, key))
+
+    def _sample_rows(self, logits, active: list[Slot]) -> np.ndarray:
+        """Sample every row of a decode step's last-token logits.
+
+        Greedy is batch-wide argmax (bit-identical to the oracle's).
+        Temperature uses one key per (request, token index) — the same
+        fold_in schedule as ``Engine.generate`` — vmapped over rows."""
+        if self.cfg.temperature <= 0.0:
+            return np.asarray(self.engine.sample(logits, None))
+        keys = [jax.random.PRNGKey(0)] * len(self.slots)
+        for slot in active:
+            keys[slot.idx] = self._step_key(slot.req, slot.emitted)
+        temp = self.cfg.temperature
+        return np.asarray(jax.vmap(
+            lambda key, row: gumbel_argmax(row, temp, key))(
+                jnp.stack(keys), logits))
+
+    # ------------------------------------------------------------- driving
+    def run(self, requests=None, *, max_steps: int = 1_000_000
+            ) -> list[RequestResult]:
+        """Submit `requests` (optional) and tick until fully drained."""
+        for req in requests or ():
+            self.submit(req)
+        steps = 0
+        while self.busy:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"scheduler not draining after "
+                                   f"{max_steps} steps")
+        return self.results
