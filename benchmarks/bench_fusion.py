@@ -1,0 +1,211 @@
+"""Fusion-aware chain planning benchmark -> BENCH_fusion.json.
+
+Tracks the fused-vs-unfused trajectory across PRs: per-chain modeled
+energy / EDP for the MLP gate/up -> silu* -> down chain of the serving
+smoke configs (llama3 / stablelm / deepseek-moe) and one paper model, on
+an edge and a center accelerator template plus the TPU-v5e-like Pallas
+planning spec — and the fused Pallas kernel's wall clock against the
+unfused two-``goma_matmul`` composition (interpret mode off-TPU; the
+same harness measures compiled kernels on real TPUs).  The JSON is
+written to the repo root so the numbers are diffable across commits.
+
+    PYTHONPATH=src python benchmarks/bench_fusion.py           # full
+    PYTHONPATH=src python benchmarks/bench_fusion.py --smoke   # CI gate
+
+The smoke mode is the CI fast-lane step: asserts (a) the chain optimum
+never exceeds the sum of the independent per-GEMM optima (the chain
+certificate's headline claim), (b) fused < unfused modeled energy on
+the three serving smoke configs, and (c) the fused Pallas kernel is
+bit-identical to the unfused composition — loud failures on any chain
+objective or kernel regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from common import ROOT, emit
+
+from repro.core import TEMPLATES
+from repro.core.edp import delay_ns
+from repro.core.fusion import GemmChain, mlp_chain, solve_chain
+
+BENCH_PATH = ROOT / "BENCH_fusion.json"
+
+# The serving smoke configs the acceptance gate covers (arch registry
+# ids), plus one paper model chain for scale flavor.
+SMOKE_ARCHS = ("llama3-8b", "stablelm-1.6b", "deepseek-moe-16b")
+SMOKE_M = 512                  # prefill-chunk-scale token rows
+# free-fanout templates get the raw chain solve; the tpuv5e-like Pallas
+# spec (fixed MXU spatial tile) is planned through plan_fused_mlp, which
+# owns the MXU padding (see tpu_plan_case)
+HW_NAMES = ("a100-like", "gemmini-like", "eyeriss-like")
+
+
+def _smoke_chain_rows():
+    """(case name, chain) rows built from the three smoke configs'
+    actual MLP dims (MoE expert share included)."""
+    from repro.configs import get_config, smoke_config
+    rows = []
+    for arch in SMOKE_ARCHS:
+        cfg = smoke_config(get_config(arch))
+        d, ff = cfg.d_model, cfg.d_ff
+        m = SMOKE_M
+        if cfg.n_experts:
+            m = max(1, SMOKE_M * cfg.top_k // cfg.n_experts)
+        rows.append((f"{arch}-smoke",
+                     mlp_chain(m, ff, d, name=f"{arch}-smoke-mlp")))
+    return rows
+
+
+def chain_case(name: str, chain: GemmChain, hw_name: str) -> dict:
+    hw = TEMPLATES[hw_name]
+    t0 = time.perf_counter()
+    res = solve_chain(chain, hw)
+    wall = time.perf_counter() - t0
+    c = res.certificate
+    row = {
+        "case": name, "hw": hw_name,
+        "producer_dims": list(chain.producer.dims),
+        "consumer_dims": list(chain.consumer.dims),
+        "producer_count": chain.producer_count,
+        "feasible": c.feasible,
+        "fused": c.fused, "bm": c.bm,
+        "fused_energy_pj": c.objective,
+        "unfused_energy_pj": c.unfused_objective,
+        "credit_pj": c.credit,
+        "savings_pct": 100.0 * c.savings,
+        "gap": c.gap,
+        "n_solves": c.n_solves,
+        "bm_candidates": c.bm_candidates,
+        "solve_wall_s": wall,
+    }
+    if res.producer_mapping is not None:
+        # EDP proxy: chain delay is the sum of link compute lower bounds
+        # (links are sequentially dependent); energy is the chain model's
+        t = (chain.producer_count
+             * delay_ns(chain.producer, res.producer_mapping, hw)
+             + delay_ns(chain.consumer, res.consumer_mapping, hw))
+        row["delay_ns"] = t
+        row["fused_edp"] = (c.objective * 1e-12) * (t * 1e-9)
+        row["unfused_edp"] = (c.unfused_objective * 1e-12) * (t * 1e-9)
+    return row
+
+
+def kernel_wallclock_case(interpret: bool) -> dict:
+    """Fused Pallas kernel vs unfused composition wall clock + bit-match
+    (tiny shape: interpret mode executes on CPU)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.tpu_mapping import plan_fused_mlp
+    from repro.kernels.ops import fused_mlp, fused_mlp_composition
+
+    M, FF, K = 256, 512, 256
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    a = jax.random.normal(ks[0], (M, K), jnp.float32) * 0.1
+    wg = jax.random.normal(ks[1], (K, FF), jnp.float32) * 0.1
+    wu = jax.random.normal(ks[2], (K, FF), jnp.float32) * 0.1
+    wd = jax.random.normal(ks[3], (FF, K), jnp.float32) * 0.1
+    plan = plan_fused_mlp(M, FF, K, dtype_bytes=4)
+
+    def timed(fn):
+        fn().block_until_ready()            # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = fn()
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / 3, out
+
+    t_fused, out_f = timed(
+        lambda: fused_mlp(a, wg, wu, wd, interpret=interpret, plan=plan))
+    t_comp, out_c = timed(
+        lambda: fused_mlp_composition(a, wg, wu, wd, plan,
+                                      interpret=interpret))
+    bit = bool(np.array_equal(np.asarray(out_f), np.asarray(out_c)))
+    return {"shape": [M, FF, K], "interpret": interpret,
+            "fused_s": t_fused, "composition_s": t_comp,
+            "speedup": t_comp / t_fused if t_fused else float("nan"),
+            "bit_identical": bit, "plan_fused": plan.fused,
+            "bm": plan.bm, "bk": plan.bk}
+
+
+def run(smoke: bool) -> dict:
+    rows = []
+    chains = _smoke_chain_rows()
+    if not smoke:
+        chains.append(("qwen3-0.6b-8k",
+                       mlp_chain(8192, 3072, 1024, name="qwen3_mlp_8k")))
+    for name, chain in chains:
+        for hw_name in HW_NAMES:
+            row = chain_case(name, chain, hw_name)
+            rows.append(row)
+            emit(f"fusion_{name}@{hw_name}",
+                 row["solve_wall_s"] * 1e6,
+                 f"fused={row['fused']} savings={row['savings_pct']:.2f}%")
+            if not row["feasible"]:
+                continue
+            # the chain certificate's headline claim, always on
+            assert row["fused_energy_pj"] <= row["unfused_energy_pj"] \
+                * (1 + 1e-12), row
+            assert row["gap"] == 0.0, row
+
+    # tpuv5e-like via the Pallas fused planner (MXU padding + fixed
+    # spatial tile + z-walk realizability — what the kernel dispatches)
+    tpu_rows = []
+    for name, chain in chains:
+        from repro.core.tpu_mapping import plan_fused_mlp
+        p, c = chain.producer, chain.consumer
+        plan = plan_fused_mlp(p.Lx, p.Ly, p.Lz, c.Ly, dtype_bytes=4)
+        trow = {"case": name, "hw": "tpuv5e-like",
+                "dims": [p.Lx, p.Ly, p.Lz, c.Ly],
+                "padded": list(plan.padded), "fused": plan.fused,
+                "bm": plan.bm, "bk": plan.bk,
+                "fused_energy_pj": plan.objective,
+                "unfused_energy_pj": plan.unfused_objective,
+                "savings_pct": (100.0 * (1 - plan.objective
+                                         / plan.unfused_objective)
+                                if plan.unfused_objective else 0.0)}
+        tpu_rows.append(trow)
+        emit(f"fusion_{name}@tpu_plan", plan.solve_time_s * 1e6,
+             f"fused={plan.fused} savings={trow['savings_pct']:.2f}%")
+        assert plan.objective <= plan.unfused_objective * (1 + 1e-12), trow
+
+    import jax
+    krow = kernel_wallclock_case(interpret=jax.default_backend() != "tpu")
+    emit("fusion_kernel_wallclock", krow["fused_s"] * 1e6,
+         f"composition={krow['composition_s'] * 1e6:.1f}us "
+         f"bit_identical={krow['bit_identical']}")
+
+    if smoke:
+        # CI gate: fused strictly beats unfused on every smoke config on
+        # at least one template, and the kernel bit-matches
+        for name, _ in chains:
+            case_rows = [r for r in rows if r["case"] == name]
+            assert any(r["fused"] and r["savings_pct"] > 0
+                       for r in case_rows), (name, case_rows)
+        assert krow["bit_identical"], krow
+
+    out = {"schema": 1, "cases": rows, "tpu_plans": tpu_rows,
+           "kernel": krow}
+    if not smoke:
+        BENCH_PATH.write_text(json.dumps(out, indent=1) + "\n")
+        print(f"wrote {BENCH_PATH}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast-lane gate (asserts + smaller sweep)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    if args.smoke:
+        print("fusion smoke OK: chain<=sum on all cases, fused<unfused "
+              "on all smoke configs, kernel bit-identical")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,8 @@ Suites:
              BENCH_solver.json perf-trajectory artifact at the repo root
   serving    continuous-batching vs static-batch traffic replay ->
              BENCH_serving.json artifact at the repo root
+  fusion     fused-vs-unfused chained-GEMM (MLP gate/up->down) energy,
+             EDP and kernel wall clock -> BENCH_fusion.json at the root
 """
 from __future__ import annotations
 
@@ -92,6 +94,9 @@ def main() -> None:
     if on("serving"):
         import bench_serving
         guarded("serving", lambda: bench_serving.run())
+    if on("fusion"):
+        import bench_fusion
+        guarded("fusion", lambda: bench_fusion.run(smoke=False))
     if on("roofline"):
         try:
             import bench_roofline

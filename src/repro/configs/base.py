@@ -88,6 +88,11 @@ class ArchConfig:
     # MoE dispatch: "dense" (one-hot, static, E/top_k redundant compute)
     # or "gathered" (sort-based capacity buckets, §Perf hillclimb B3)
     moe_dispatch: str = "dense"
+    # route gated-MLP blocks through the GOMA-chain-planned fused Pallas
+    # kernel (kernels/goma_fused.py): gate/up -> silu* -> down with the
+    # intermediate strip held in VMEM scratch; interpret mode off-TPU.
+    # Token-identical to the unfused composition (DESIGN.md §Fusion).
+    fused_mlp: bool = False
 
     @property
     def padded_vocab(self) -> int:

@@ -12,6 +12,8 @@ from .certificate import (Certificate, check_constraints, objective_value,
 from .edp import EdpReport, delay_ns, evaluate
 from .energy import (AccessCounts, EnergyBreakdown, analytical_counts,
                      analytical_energy, closed_form_is_exact, energy)
+from .fusion import (ChainCertificate, ChainSolveResult, GemmChain,
+                     mlp_chain, solve_chain)
 from .geometry import (AXES, Gemm, Mapping, divisor_chains, divisors,
                        enumerate_mappings, mapping_space_size)
 from .hardware import (A100_LIKE, EYERISS_LIKE, GEMMINI_LIKE, TEMPLATES,
@@ -22,12 +24,13 @@ from .timeloop_ref import reference_counts, reference_energy
 
 __all__ = [
     "AXES", "A100_LIKE", "AcceleratorSpec", "AccessCounts", "Certificate",
-    "EdpReport", "EnergyBreakdown", "Ert", "EYERISS_LIKE", "GEMMINI_LIKE",
-    "Gemm", "Mapping", "SolveResult", "TEMPLATES", "TPUV1_LIKE",
+    "ChainCertificate", "ChainSolveResult", "EdpReport", "EnergyBreakdown",
+    "Ert", "EYERISS_LIKE", "GEMMINI_LIKE", "Gemm", "GemmChain", "Mapping",
+    "SolveResult", "TEMPLATES", "TPUV1_LIKE",
     "TPUV5E_LIKE", "analytical_counts", "analytical_energy",
     "check_constraints", "closed_form_is_exact", "delay_ns",
     "divisor_chains", "divisors", "energy", "enumerate_mappings",
-    "evaluate", "mapping_space_size", "objective_value", "reference_counts",
-    "reference_energy", "simulate_counts", "solve", "verify",
-    "verify_by_enumeration",
+    "evaluate", "mapping_space_size", "mlp_chain", "objective_value",
+    "reference_counts", "reference_energy", "simulate_counts", "solve",
+    "solve_chain", "verify", "verify_by_enumeration",
 ]

@@ -248,16 +248,20 @@ _KEEP_FIRST = np.array([True, False])
 
 
 @functools.lru_cache(maxsize=1024)
-def _chain_arrays(L0d: int, fixed_s: int | None):
+def _chain_arrays(L0d: int, fixed_s: int | None, fixed_l1: int | None = None):
     """Variant-independent chain geometry of one axis extent: the divisor
     chains as int64 columns, the spatial values, and the s-group index
     partition with per-group dense l1-ranks.  Shared by all variant keys
-    (and across solves)."""
+    (and across solves).  ``fixed_l1`` restricts to chains whose SRAM
+    tile equals it (the chain solver's tiling-compatibility pin)."""
     arr = np.array(divisor_chains(L0d), dtype=np.int64)
     l1, l2, l3 = (np.ascontiguousarray(arr[:, 0]),
                   np.ascontiguousarray(arr[:, 1]),
                   np.ascontiguousarray(arr[:, 2]))
     s = l2 // l3
+    if fixed_l1 is not None:
+        mask = l1 == fixed_l1
+        l1, l2, l3, s = l1[mask], l2[mask], l3[mask], s[mask]
     if fixed_s is not None:
         mask = s == fixed_s
         l1, l2, l3, s = l1[mask], l2[mask], l3[mask], s[mask]
@@ -271,20 +275,21 @@ def _chain_arrays(L0d: int, fixed_s: int | None):
 
 
 def _axis_cands(kind: str, L0d: int, ert: Ert, w01: bool, w12: bool,
-                r1: bool, r3: bool, fixed_s: int | None) -> _AxisCands:
+                r1: bool, r3: bool, fixed_s: int | None,
+                fixed_l1: int | None = None) -> _AxisCands:
     # Canonical variant key: the walking bits only enter the energy under
     # the matching residency bit (w01 via the r1 terms, w12 via the r3
     # compensation/rho terms, for both axis kinds), so 16 raw keys
     # collapse to 9 distinct candidate arrays.
     w01, w12 = w01 and r1, w12 and r3
-    key = (kind, L0d, ert, w01, w12, r1, r3, fixed_s)
+    key = (kind, L0d, ert, w01, w12, r1, r3, fixed_s, fixed_l1)
     c = _AXIS_MEMO.get(key)
     if c is not None:
         _AXIS_MEMO.move_to_end(key)
         _AXIS_STATS["hits"] += 1
         return c
     _AXIS_STATS["misses"] += 1
-    l1, l2, l3, s, s_vals, groups = _chain_arrays(L0d, fixed_s)
+    l1, l2, l3, s, s_vals, groups = _chain_arrays(L0d, fixed_s, fixed_l1)
     g = _axis_energy_kind(kind, L0d, l1, l2, l3, w01, w12, r1, r3, ert)
     by_s: dict[int, np.ndarray] = {}
     min_g_by_s: dict[int, float] = {}
@@ -659,7 +664,9 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
           spatial_mode: str | None = None,
           allowed_walk01: tuple[str, ...] | None = None,
           incumbent: float | None = None,
-          engine: str | None = None) -> SolveResult:
+          engine: str | None = None,
+          fixed_l1: tuple[int | None, int | None, int | None] | None = None,
+          require_res1: tuple[bool, bool, bool] | None = None) -> SolveResult:
     """Globally optimal mapping for (gemm, hw) with certificate.
 
     objective: "energy" (paper default) or "edp".
@@ -679,6 +686,15 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
     used is recorded on the certificate.  Node/prune counters are
     comparable at triple granularity; ``nodes_explored`` counts candidate
     pairs for the frontier engine vs z-visits for the DFS.
+    fixed_l1: per-axis SRAM tile pin (None = free).  Restricts the axis's
+    divisor chains to those with L1 equal to the pinned extent — the chain
+    solver's tiling-compatibility constraint (core/fusion.py): both
+    engines share the restricted candidate arrays, so the differential
+    bit-identity guarantee extends to constrained solves unchanged.
+    require_res1: per-axis SRAM residency force (True = the datatype with
+    that normal axis must be SRAM-resident).  Restricts the res1 combo
+    set; used by the chain solver so the fused intermediate's footprint
+    is charged against capacity.
     """
     t0 = time.perf_counter()
     _SOLVE_STATS["calls"] += 1
@@ -700,8 +716,10 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
             kind = "xy" if axis in ("x", "y") else "z"
             fixed_s = (hw.fixed_spatial[AXES.index(axis)]
                        if hw.fixed_spatial is not None else None)
+            fl1 = (fixed_l1[AXES.index(axis)]
+                   if fixed_l1 is not None else None)
             c = _axis_cands(kind, gemm.dim(axis), hw.ert, w01, w12, r1, r3,
-                            fixed_s)
+                            fixed_s, fl1)
             local_cands[key] = c
         return c
 
@@ -711,10 +729,14 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
         res_opts = list(itertools.product(bools, repeat=3))
     else:
         res_opts = [(True, True, True)]
+    res1_opts = res_opts
+    if require_res1 is not None:
+        res1_opts = [r for r in res_opts
+                     if all(r[d] for d in range(3) if require_res1[d])]
     walk01_opts = AXES if allowed_walk01 is None else allowed_walk01
     combos = [(a01, a12, r1, r3)
               for a01 in walk01_opts for a12 in AXES
-              for r1 in res_opts for r3 in res_opts]
+              for r1 in res1_opts for r3 in res_opts]
 
     npe = hw.num_pe
     macc = hw.ert.macc          # eq. 28 — inside the objective: under the
@@ -774,11 +796,13 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
             # Re-solve cold — exactness never depends on the incumbent.
             return solve(gemm, hw, objective=objective,
                          spatial_mode=requested_mode,
-                         allowed_walk01=allowed_walk01, engine=eng)
+                         allowed_walk01=allowed_walk01, engine=eng,
+                         fixed_l1=fixed_l1, require_res1=require_res1)
         if spatial_mode == "equality" and requested_mode is None:
             # eq. 29 infeasible for this (gemm, hw): documented fallback
             return solve(gemm, hw, objective="edp", spatial_mode="le",
-                         allowed_walk01=allowed_walk01, engine=eng)
+                         allowed_walk01=allowed_walk01, engine=eng,
+                         fixed_l1=fixed_l1, require_res1=require_res1)
         cert = Certificate(gemm=gemm, hw_name=hw.name, mapping=None,
                            objective=np.inf, upper_bound=np.inf,
                            lower_bound=np.inf, nodes_explored=st.nodes,
@@ -824,15 +848,42 @@ class SolveRequest:
     incumbent: float | None = None
 
 
+def _request_identity(r) -> tuple:
+    """Semantic identity of one batch request (the single-flight key).
+
+    Gemm names are metadata, not identity — two requests differing only
+    in the name are the same solve (matching the planner's plan-key
+    semantics, which hash extents only)."""
+    return (r.gemm.dims, r.hw, r.objective, r.spatial_mode,
+            r.allowed_walk01, r.incumbent,
+            getattr(r, "fixed_l1", None), getattr(r, "require_res1", None))
+
+
 def solve_many(requests, *, engine: str | None = None) -> list[SolveResult]:
     """Batch entry point: sequential solves sharing the axis-cands memo.
 
     Scenario batches (planner/batch.py) repeat d_model/d_ff axis extents
     across most shapes, so per-axis candidate construction — the dominant
     per-solve setup cost — is computed once per distinct axis for the
-    whole batch instead of once per GEMM."""
-    return [solve(r.gemm, r.hw, objective=r.objective,
-                  spatial_mode=r.spatial_mode,
-                  allowed_walk01=r.allowed_walk01,
-                  incumbent=r.incumbent, engine=engine)
-            for r in requests]
+    whole batch instead of once per GEMM.
+
+    Identical requests are single-flighted: N copies of the same
+    (gemm, hw, objective, mode, walk, incumbent) tuple cost exactly one
+    ``solve`` invocation (observable via ``solver_stats()``); every copy
+    receives the same SolveResult object."""
+    requests = list(requests)
+    flights: dict[tuple, SolveResult] = {}
+    out: list[SolveResult] = []
+    for r in requests:
+        key = _request_identity(r)
+        res = flights.get(key)
+        if res is None:
+            res = solve(r.gemm, r.hw, objective=r.objective,
+                        spatial_mode=r.spatial_mode,
+                        allowed_walk01=r.allowed_walk01,
+                        incumbent=r.incumbent, engine=engine,
+                        fixed_l1=getattr(r, "fixed_l1", None),
+                        require_res1=getattr(r, "require_res1", None))
+            flights[key] = res
+        out.append(res)
+    return out

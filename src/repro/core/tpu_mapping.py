@@ -20,6 +20,7 @@ import dataclasses
 import functools
 import os
 
+from .fusion import GemmChain
 from .geometry import Gemm, Mapping
 from .hardware import TPUV5E_LIKE, AcceleratorSpec
 from .solver import SolveResult, solve
@@ -47,6 +48,7 @@ def set_plan_store(store) -> None:
     _PLAN_STORE_RESOLVED = True
     if changed:
         plan_gemm_tiling.cache_clear()
+        _plan_fused_mlp.cache_clear()
 
 
 def get_plan_store():
@@ -136,6 +138,124 @@ def plan_from_mapping(M: int, N: int, K: int,
                        block=(bm, bn, bk), grid_order=tuple(order),
                        walk=m.alpha01, objective=objective,
                        solve_time_s=solve_time_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedTilePlan:
+    """A GOMA-chain-solved Pallas tiling for the fused gated-MLP op:
+    ``out[M,N2] = act(A@Wg, A@Wu) @ Wd`` with A ``(M,K)``, Wg/Wu
+    ``(K,FF)``, Wd ``(FF,N2)`` and the intermediate ``(bm, FF)`` strip
+    held in VMEM scratch.
+
+    ``fused=False`` records that no strip height was residency-feasible
+    (or the chain solver kept the unfused pair): callers run the
+    two-``goma_matmul`` composition instead.
+    """
+
+    M: int
+    FF: int
+    K: int
+    N2: int
+    padded: tuple[int, int, int, int]     # (pm, pff, pk, pn2)
+    fused: bool
+    bm: int                               # shared m-strip height
+    bk: int                               # producer reduction tile
+    objective: float                      # chain objective, absolute pJ
+    unfused_objective: float
+    solve_time_s: float
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        pm, pff, pk, pn2 = self.padded
+        return (pm // self.bm, pk // self.bk)
+
+    def producer_plan(self) -> TpuTilePlan:
+        """The equivalent single-GEMM tiling of one producer link — the
+        unfused composition the fused kernel must bit-match (full-width
+        N block, same bm/bk, k-walk)."""
+        pm, pff, pk, pn2 = self.padded
+        return TpuTilePlan(M=self.M, N=self.FF, K=self.K,
+                           padded=(pm, pff, pk),
+                           block=(self.bm, pff, self.bk),
+                           grid_order=("m", "n", "k"), walk="z",
+                           objective=float("nan"), solve_time_s=0.0)
+
+    def consumer_plan(self) -> TpuTilePlan:
+        """The consumer link's tiling: the compatibility pin makes the
+        K tile full (nk == 1), so the composition's second matmul is the
+        single-k fast path — one fp32 dot per block, exactly what the
+        fused kernel computes in-register."""
+        pm, pff, pk, pn2 = self.padded
+        return TpuTilePlan(M=self.M, N=self.N2, K=self.FF,
+                           padded=(pm, pn2, pff),
+                           block=(self.bm, pn2, pff),
+                           grid_order=("m", "n", "k"), walk="z",
+                           objective=float("nan"), solve_time_s=0.0)
+
+
+def fused_mlp_problem(M: int, FF: int, K: int, N2: int | None = None, *,
+                      dtype_bytes: int = 2):
+    """The (padded GemmChain, spec, padded dims) chain instance of a TPU
+    fused MLP — the identity under which fused plans are stored.
+
+    FF is both the producer's N and the consumer's K, so it is always
+    padded to the MXU (the intermediate is a matmul output)."""
+    if N2 is None:
+        N2 = K
+    pm, pff, pn2 = _pad_to(M, MXU), _pad_to(FF, MXU), _pad_to(N2, MXU)
+    pk = _pad_to(K, MXU) if K >= MXU else K
+    hw = tpu_spec(dtype_bytes)
+    chain = GemmChain(
+        producer=Gemm(pm, pff, pk, f"tpu_fused_{M}x{FF}x{K}_gate_up"),
+        consumer=Gemm(pm, pn2, pff, f"tpu_fused_{M}x{FF}x{K}_down"),
+        producer_count=2, elementwise="silu_mul",
+        name=f"tpu_fused_mlp_{M}x{FF}x{K}x{N2}")
+    return chain, hw, (pm, pff, pk, pn2)
+
+
+def plan_fused_mlp(M: int, FF: int, K: int, N2: int | None = None, *,
+                   dtype_bytes: int = 2) -> FusedTilePlan:
+    """GOMA-chain-optimal fused-MLP tiling (bm, bk) for the Pallas fused
+    kernel, read-through cached in the plan store's fused section when
+    one is installed.
+
+    The *fused* producer links are solved under
+    ``allowed_walk01=("z",)`` — the fused kernel accumulates the strip
+    in VMEM scratch across k steps, so a non-z outer walk (partial
+    strips round-tripping HBM) is not expressible.  The unfused
+    baseline stays unrestricted (see ``solve_chain``), so a fused plan
+    is only recorded when it beats every unfused realization."""
+    # N2 defaults to K; normalize before the cache so the 3- and 4-arg
+    # calling conventions share one entry (one chain solve, not two)
+    return _plan_fused_mlp(M, FF, K, K if N2 is None else N2,
+                           dtype_bytes=dtype_bytes)
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_fused_mlp(M: int, FF: int, K: int, N2: int, *,
+                    dtype_bytes: int = 2) -> FusedTilePlan:
+    chain, hw, padded = fused_mlp_problem(M, FF, K, N2,
+                                          dtype_bytes=dtype_bytes)
+    store = get_plan_store()
+    if store is not None:
+        from ..planner.batch import cached_solve_chain
+        res = cached_solve_chain(chain, hw, objective="energy",
+                                 allowed_walk01=("z",), store=store)
+    else:
+        from .fusion import solve_chain
+        res = solve_chain(chain, hw, objective="energy",
+                          allowed_walk01=("z",))
+    cert = res.certificate
+    if cert.fused and res.producer_mapping is not None:
+        bm = int(res.producer_mapping.L1[0])
+        bk = int(res.producer_mapping.L1[2])
+    else:
+        bm, bk = 0, 0
+    return FusedTilePlan(M=M, FF=FF, K=K, N2=N2, padded=padded,
+                         fused=bool(cert.fused), bm=bm, bk=bk,
+                         objective=cert.objective,
+                         unfused_objective=cert.unfused_objective,
+                         solve_time_s=cert.solve_time_s)
 
 
 @functools.lru_cache(maxsize=512)

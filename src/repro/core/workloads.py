@@ -146,6 +146,82 @@ def scenario_gemms(spec: LlmSpec, *, prefill_seqs: Sequence[int] = (),
     return out
 
 
+def _mlp_chain_rows(spec: LlmSpec, m: int, name: str):
+    """The MLP gate/up -> silu* -> down chain rows of one model phase.
+
+    The attention chains (x -> QKV -> score) tie per-head slices of the
+    projection output to the score GEMM's K — not a whole-operand
+    producer-N / consumer-K tie — so only the MLP block is extracted as
+    a fusable chain (DESIGN.md §Fusion)."""
+    from .fusion import GemmChain
+    ff, d = spec.d_ff, spec.d_model
+    if spec.n_experts:
+        m_exp = max(1, m * spec.top_k // spec.n_experts)
+        n_mats = spec.n_experts + spec.shared_experts
+        chain = GemmChain(
+            producer=Gemm(m_exp, ff, d, "mlp_gate_up"),
+            consumer=Gemm(m_exp, d, ff, "mlp_down"),
+            producer_count=2, elementwise="silu_mul", name=name)
+        return [("mlp_chain", chain, spec.layers * n_mats)]
+    chain = GemmChain(
+        producer=Gemm(m, ff, d, "mlp_gate_up"),
+        consumer=Gemm(m, d, ff, "mlp_down"),
+        producer_count=2, elementwise="silu_mul", name=name)
+    return [("mlp_chain", chain, spec.layers)]
+
+
+def prefill_chains(spec: LlmSpec, seq: int) -> list:
+    """Fusable dependent-GEMM chains of one prefill: (type, chain, weight).
+
+    The counterpart of ``prefill_gemms`` for the fusion-aware planner —
+    currently the MLP block only (see ``_mlp_chain_rows``)."""
+    return _mlp_chain_rows(spec, seq, f"{spec.name}_mlp_prefill{seq}")
+
+
+def decode_chains(spec: LlmSpec, batch: int, cache_len: int) -> list:
+    """Fusable chains of one batched decode step: (type, chain, weight).
+
+    ``cache_len`` does not enter the MLP shapes; it is accepted for
+    signature symmetry with ``decode_gemms``."""
+    return _mlp_chain_rows(spec, batch, f"{spec.name}_mlp_decode{batch}")
+
+
+def config_decode_chains(cfg, batch: int = 1) -> list:
+    """Chains a ``fused_mlp``-routed model will actually *dispatch* in
+    one decode/prefill-chunk step (the serving engine passes its *own*
+    model config, so prewarmed chain shapes match dispatch by
+    construction — smoke variants included).
+
+    Only the gated dense-MLP block routes through the fused op
+    (``models.layers.mlp_apply(use_fused=)``); MoE expert GEMMs go
+    through ``moe_apply`` and recurrent families have no gated MLP, so
+    those configs contribute none — prewarming chains a deployment
+    never dispatches would just burn startup solves.  (Analytical MoE
+    chain extraction for the planner/benchmarks lives in
+    ``prefill_chains``/``decode_chains``/``mlp_chain``.)"""
+    from .fusion import GemmChain
+    if cfg.family not in ("dense", "vlm") or not cfg.d_ff or \
+            cfg.n_experts or not cfg.mlp_layer_count():
+        return []
+    d, ff = cfg.d_model, cfg.d_ff
+    chain = GemmChain(
+        producer=Gemm(batch, ff, d, "mlp_gate_up"),
+        consumer=Gemm(batch, d, ff, "mlp_down"),
+        producer_count=2, elementwise="silu_mul",
+        name=f"{cfg.name}_mlp_b{batch}")
+    return [("mlp_chain", chain, cfg.mlp_layer_count())]
+
+
+def arch_decode_chains(arch_id: str, batch: int = 1,
+                       cache_len: int = 4096) -> list:
+    """Dispatchable fused-MLP chains of one decode/prefill-chunk step
+    for the repo's assigned architectures (a prefill chunk of width W
+    flattens to the batch-W decode extraction; MoE/recurrent archs
+    contribute none — see ``config_decode_chains``)."""
+    from ..configs import get_config
+    return config_decode_chains(get_config(arch_id), batch=batch)
+
+
 def paper_cases() -> list[tuple[str, LlmSpec, int, str]]:
     """The 24 evaluation cases: (case_name, model, seq, hw_template)."""
     from .hardware import CENTER_TEMPLATES, EDGE_TEMPLATES

@@ -1,0 +1,143 @@
+"""GOMA-chain-tiled fused gated-MLP Pallas kernel.
+
+Executes the two-link chain ``out = act(A@Wg, A@Wu) @ Wd`` in one
+``pallas_call``: the intermediate strip ``(bm, FF)`` lives in VMEM
+scratch, never touching HBM — the execution the chain solver's residency
+credit prices (core/fusion.py).  The (bm, bk) tiling is not hand-tuned:
+it comes from ``core.tpu_mapping.plan_fused_mlp`` (the exact chain solve
+on the TPU-v5e-like hierarchy).
+
+Bit-identity contract: the kernel is token-identical to the unfused
+two-``goma_matmul`` composition under the plan's compatibility tiles
+(``FusedTilePlan.producer_plan`` / ``consumer_plan``) — same bk-ordered
+fp32 accumulation of both producers, same cast to the I/O dtype before
+the elementwise combine, and a single full-K fp32 dot for the consumer
+(the composition's nk == 1 fast path).  Enforced by
+tests/test_kernels.py and the bench_fusion smoke gate.
+
+Grid semantics: m strips are independent ("parallel"); k carries the
+strip accumulators and is sequential ("arbitrary"), innermost — the
+chain solver's z-walk realized, as in goma_gemm.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.tpu_mapping import FusedTilePlan
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams", None)
+
+# Elementwise combines (chain.elementwise -> jnp op on (gate, up)).
+# Applied in the I/O dtype — identical to the unfused composition, where
+# the combine runs on goma_matmul outputs already cast down.
+ACTIVATIONS = {
+    "silu_mul": lambda g, u: jax.nn.silu(g) * u,
+    "gelu_mul": lambda g, u: jax.nn.gelu(g) * u,
+    "sqrelu_mul": lambda g, u: jnp.square(jax.nn.relu(g)) * u,
+    "identity": lambda g, u: g * u,
+}
+
+
+def _fused_kernel(a_ref, wg_ref, wu_ref, wd_ref, o_ref, hg_ref, hu_ref, *,
+                  nk: int, activation: str, io_dtype):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        hg_ref[...] = jnp.zeros_like(hg_ref)
+        hu_ref[...] = jnp.zeros_like(hu_ref)
+
+    hg_ref[...] += jnp.dot(a_ref[...], wg_ref[...],
+                           preferred_element_type=jnp.float32)
+    hu_ref[...] += jnp.dot(a_ref[...], wu_ref[...],
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _consume():
+        g = _rounded(hg_ref[...].astype(io_dtype))
+        u = _rounded(hu_ref[...].astype(io_dtype))
+        act = _rounded(ACTIVATIONS[activation](g, u))
+        o_ref[...] = jnp.dot(act, wd_ref[...],
+                             preferred_element_type=jnp.float32
+                             ).astype(o_ref.dtype)
+
+
+def _rounded(x):
+    """Force the value to materialize in its stated dtype.
+
+    The unfused composition rounds the intermediate to the I/O dtype at
+    every pallas_call boundary; inside the one-kernel fusion XLA would
+    otherwise fuse the cast/elementwise into the consumer dot and keep
+    extra precision — bit-breaking the composition contract for bf16."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _fused_kernel_single_k(a_ref, wg_ref, wu_ref, wd_ref, o_ref, *,
+                           activation: str, io_dtype):
+    # nk == 1: each producer dot is the whole reduction — no strip
+    # accumulators, no init branch (mirrors goma_gemm's fast path)
+    g = _rounded(jnp.dot(a_ref[...], wg_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(io_dtype))
+    u = _rounded(jnp.dot(a_ref[...], wu_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(io_dtype))
+    act = _rounded(ACTIVATIONS[activation](g, u))
+    o_ref[...] = jnp.dot(act, wd_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def goma_fused_matmul(a: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+                      wd: jnp.ndarray, plan: FusedTilePlan, *,
+                      activation: str = "silu_mul", out_dtype=None,
+                      interpret: bool = False) -> jnp.ndarray:
+    """out = act(A@Wg, A@Wu) @ Wd on padded shapes.
+
+    A: (pm, pk); Wg/Wu: (pk, pff); Wd: (pff, pn2).  The ``(bm, pff)``
+    intermediate strips live in VMEM scratch per the plan."""
+    pm, pff, pk, pn2 = plan.padded
+    assert a.shape == (pm, pk), (a.shape, plan)
+    assert wg.shape == (pk, pff) and wu.shape == (pk, pff), (wg.shape,
+                                                            wu.shape, plan)
+    assert wd.shape == (pff, pn2), (wd.shape, plan)
+    assert plan.fused and plan.bm > 0, ("unfused plan dispatched to the "
+                                        "fused kernel", plan)
+    bm, bk = plan.bm, plan.bk
+    out_dtype = out_dtype or a.dtype
+    io_dtype = a.dtype
+    nm, nk = plan.grid
+
+    kwargs = {}
+    if _CompilerParams is not None:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    if nk == 1:
+        kernel = functools.partial(_fused_kernel_single_k,
+                                   activation=activation, io_dtype=io_dtype)
+        scratch = []
+    else:
+        kernel = functools.partial(_fused_kernel, nk=nk,
+                                   activation=activation, io_dtype=io_dtype)
+        scratch = [pltpu.VMEM((bm, pff), jnp.float32),
+                   pltpu.VMEM((bm, pff), jnp.float32)]
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda m, k: (m, k)),
+                  pl.BlockSpec((bk, pff), lambda m, k: (k, 0)),
+                  pl.BlockSpec((bk, pff), lambda m, k: (k, 0)),
+                  pl.BlockSpec((pff, pn2), lambda m, k: (0, 0))],
+        out_specs=pl.BlockSpec((bm, pn2), lambda m, k: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn2), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(a, wg, wu, wd)

@@ -12,7 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..core.tpu_mapping import plan_gemm_tiling
+from ..core.tpu_mapping import plan_fused_mlp, plan_gemm_tiling
+from .goma_fused import ACTIVATIONS, goma_fused_matmul
 from .goma_gemm import goma_matmul
 from .ref import matmul_ref
 
@@ -52,3 +53,73 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool | None = None,
 def gemm_plan_info(M: int, N: int, K: int, dtype_bytes: int = 2):
     """Expose the GOMA plan (for logging / EXPERIMENTS.md §Perf)."""
     return plan_gemm_tiling(M, N, K, dtype_bytes=dtype_bytes)
+
+
+def _pad2(x, rows, cols):
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret",
+                                             "plan"))
+def fused_mlp_composition(a: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+                          wd: jnp.ndarray, plan, *,
+                          activation: str = "silu_mul",
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """The *unfused* two-``goma_matmul`` composition under the fused
+    plan's compatibility tiles — the bit-identity oracle the fused
+    kernel must match token-for-token (and the execution path when a
+    chain's residency is infeasible but a fused plan exists)."""
+    M, K = a.shape
+    _, N2 = wd.shape
+    pm, pff, pk, pn2 = plan.padded
+    itp = (not _on_tpu()) if interpret is None else interpret
+    a_p = _pad2(a, pm, pk)
+    hg = goma_matmul(a_p, _pad2(wg, pk, pff), plan.producer_plan(),
+                     interpret=itp)
+    hu = goma_matmul(a_p, _pad2(wu, pk, pff), plan.producer_plan(),
+                     interpret=itp)
+    act = ACTIVATIONS[activation](hg, hu)
+    out = goma_matmul(act, _pad2(wd, pff, pn2), plan.consumer_plan(),
+                      interpret=itp)
+    return out[:M, :N2]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret",
+                                             "force_xla", "plan"))
+def fused_mlp(a: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+              wd: jnp.ndarray, *, activation: str = "silu_mul",
+              interpret: bool | None = None, force_xla: bool = False,
+              plan=None) -> jnp.ndarray:
+    """``out[M,N2] = act(A@Wg, A@Wu) @ Wd`` through the GOMA-chain-planned
+    fused Pallas kernel (intermediate strips in VMEM scratch, zero HBM
+    round-trips).
+
+    ``plan``: an explicit ``FusedTilePlan`` (e.g. prewarmed through the
+    plan store's fused section).  Default: ``plan_fused_mlp``, which
+    reads through the plan database when one is installed.  When the
+    chain solver kept the unfused pair (residency infeasible),
+    dispatches the ordinary per-GEMM ``gemm`` composition instead.
+    """
+    M, K = a.shape
+    K2, FF = wg.shape
+    FF2, N2 = wd.shape
+    assert K == K2 and wu.shape == (K, FF) and FF2 == FF, (
+        a.shape, wg.shape, wu.shape, wd.shape)
+    if force_xla:
+        act = ACTIVATIONS[activation](matmul_ref(a, wg), matmul_ref(a, wu))
+        return matmul_ref(act, wd)
+    if plan is None:
+        plan = plan_fused_mlp(M, FF, K, N2,
+                              dtype_bytes=jnp.dtype(a.dtype).itemsize)
+    assert (plan.M, plan.FF, plan.K, plan.N2) == (M, FF, K, N2), (
+        plan, (M, FF, K, N2))
+    itp = (not _on_tpu()) if interpret is None else interpret
+    if not plan.fused:
+        act = ACTIVATIONS[activation](gemm(a, wg, interpret=interpret),
+                                      gemm(a, wu, interpret=interpret))
+        return gemm(act, wd, interpret=interpret)
+    pm, pff, pk, pn2 = plan.padded
+    out = goma_fused_matmul(_pad2(a, pm, pk), _pad2(wg, pk, pff),
+                            _pad2(wu, pk, pff), _pad2(wd, pff, pn2),
+                            plan, activation=activation, interpret=itp)
+    return out[:M, :N2]

@@ -40,9 +40,16 @@ def main() -> None:
                     help="--continuous: synthetic trace length")
     ap.add_argument("--arrival-rate", type=float, default=8.0,
                     help="--continuous: Poisson arrivals per second")
+    ap.add_argument("--fused-mlp", action="store_true",
+                    help="route gated-MLP blocks through the GOMA-chain-"
+                         "planned fused Pallas kernel (token-identical; "
+                         "fused plans prewarm through --plan-db)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.fused_mlp:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, fused_mlp=True)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     store = None
@@ -111,7 +118,8 @@ def _serve_continuous(args, cfg, model, params, store) -> None:
         arch_id=args.arch if store is not None else None,
         clock=clock.now)
     if store is not None:
-        print(f"plan prewarm: {sched.prewarmed_plans} GEMM tilings  "
+        print(f"plan prewarm: {sched.prewarmed_plans} GEMM tilings, "
+              f"{sched.prewarmed_chains} fused chains  "
               f"store={store.stats()}")
     results = replay(sched, trace, clock)
     summ = sched.metrics.summary()

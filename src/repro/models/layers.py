@@ -276,10 +276,30 @@ def mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
             "wd": dense_init(ks[2], d_ff, d_model, dtype)}
 
 
-def mlp_apply(p: Params, x: jnp.ndarray,
-              activation: str = "silu") -> jnp.ndarray:
+def mlp_apply(p: Params, x: jnp.ndarray, activation: str = "silu",
+              use_fused: bool = False) -> jnp.ndarray:
+    if use_fused:
+        return fused_mlp_apply(p, x, activation=activation)
     g = dense(p["wg"], x)
     act = (jax.nn.silu if activation == "silu"
            else lambda t: jnp.square(jax.nn.relu(t))
            if activation == "sqrelu" else jax.nn.gelu)(g)
     return dense(p["wd"], act * dense(p["wu"], x))
+
+
+def fused_mlp_apply(p: Params, x: jnp.ndarray,
+                    activation: str = "silu") -> jnp.ndarray:
+    """Gated MLP through the GOMA-chain-planned fused Pallas kernel.
+
+    Token rows flatten to one (B*S, d) GEMM chain; the chain plan comes
+    from the fused section of the plan database when one is installed
+    (``core.tpu_mapping.plan_fused_mlp``).  Falls back internally to the
+    per-GEMM composition when the chain's residency is infeasible."""
+    from ..kernels.ops import fused_mlp
+    *lead, d = x.shape
+    x2 = x.reshape(-1, d)
+    cdt = x.dtype
+    out = fused_mlp(x2, p["wg"]["w"].astype(cdt), p["wu"]["w"].astype(cdt),
+                    p["wd"]["w"].astype(cdt),
+                    activation=f"{activation}_mul")
+    return out.reshape(*lead, out.shape[-1])

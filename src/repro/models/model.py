@@ -186,7 +186,8 @@ class Model:
                                        L.apply_norm(lp["ln2"], x, cfg.norm))
             else:
                 h = L.mlp_apply(lp["mlp"],
-                                L.apply_norm(lp["ln2"], x, cfg.norm))
+                                L.apply_norm(lp["ln2"], x, cfg.norm),
+                                use_fused=cfg.fused_mlp)
                 aux = jnp.zeros((), jnp.float32)
             return x + h, new_cache, aux
         if remat:

@@ -29,13 +29,15 @@ from typing import Iterable, Sequence
 
 from ..core.certificate import check_constraints, objective_value
 from ..core.energy import analytical_energy
+from ..core.fusion import ChainSolveResult, GemmChain, solve_chain
 from ..core.geometry import Gemm
 from ..core.hardware import AcceleratorSpec
 from ..core.solver import SOLVER_VERSION, SolveResult, solve
 from ..core.solver import solve_many as core_solve_many
 from ..core.workloads import LlmSpec, scenario_gemms
 from .manifest import ManifestEntry, ModelMappingManifest
-from .store import PlanEntry, PlanKey, PlanStore, plan_key
+from .store import (FusedPlanEntry, PlanEntry, PlanKey, PlanStore,
+                    chain_plan_key, plan_key)
 
 
 def _effective_mode(hw: AcceleratorSpec, spatial_mode: str | None) -> str:
@@ -98,6 +100,33 @@ def cached_solve(gemm: Gemm, hw: AcceleratorSpec, *,
     res = solve(gemm, hw, objective=objective, spatial_mode=spatial_mode,
                 allowed_walk01=allowed_walk01, incumbent=incumbent)
     store.put(PlanEntry.from_solve(key, res.certificate, hw))
+    return res
+
+
+def cached_solve_chain(chain: GemmChain, hw: AcceleratorSpec, *,
+                       objective: str = "energy",
+                       spatial_mode: str | None = None,
+                       allowed_walk01: tuple[str, ...] | None = None,
+                       store: PlanStore | None = None) -> ChainSolveResult:
+    """Read-through ``core.fusion.solve_chain``: fused-plan store hit ->
+    no solves; miss -> chain solve and write back under the chain-hash
+    key."""
+    if store is None:
+        return solve_chain(chain, hw, objective=objective,
+                           spatial_mode=spatial_mode,
+                           allowed_walk01=allowed_walk01)
+    key = chain_plan_key(chain, hw, objective=objective,
+                         spatial_mode=spatial_mode,
+                         allowed_walk01=allowed_walk01)
+    entry = store.get_fused(key)
+    if entry is not None:
+        return ChainSolveResult(producer_mapping=entry.producer_mapping,
+                                consumer_mapping=entry.consumer_mapping,
+                                certificate=entry.certificate)
+    res = solve_chain(chain, hw, objective=objective,
+                      spatial_mode=spatial_mode,
+                      allowed_walk01=allowed_walk01)
+    store.put_fused(FusedPlanEntry.from_solve(key, res, hw))
     return res
 
 
@@ -313,6 +342,52 @@ def tile_plan_from_store(store: PlanStore, M: int, N: int, K: int, *,
     return tpu_mapping.plan_from_mapping(M, N, K, padded, m,
                                          objective=cert.objective,
                                          solve_time_s=cert.solve_time_s)
+
+
+def prewarm_fused_plans(chains: Iterable[tuple[int, int, int, int]],
+                        store: PlanStore, *, dtype_bytes: int = 2) -> int:
+    """Populate the store's fused section (and process cache) with fused
+    MLP tile plans for the given (M, FF, K, N2) chain shapes; returns the
+    number planned.  Installs the store like ``prewarm_tpu_plans``."""
+    from ..core import tpu_mapping
+    n = 0
+    tpu_mapping.set_plan_store(store)
+    for (M, FF, K, N2) in chains:
+        tpu_mapping.plan_fused_mlp(M, FF, K, N2, dtype_bytes=dtype_bytes)
+        n += 1
+    return n
+
+
+def bucketed_serving_fused_chain_groups(
+        arch_id: str, *, slots: int, chunk_widths: Sequence[int],
+        cache_len: int,
+        cfg=None) -> dict[str, list[tuple[int, int, int, int]]]:
+    """Per-phase fused-MLP chain shapes (M, FF, K, N2) of a
+    continuous-batching deployment: one group per prefill-chunk width
+    plus the slot-batched decode group — the fused counterpart of
+    ``bucketed_serving_plan_shape_groups`` (same #widths + 1 bound).
+
+    ``cfg``: an explicit ``ArchConfig`` (e.g. the serving engine's own
+    model config, which may be a smoke variant) — chain dims then match
+    what the model's ``fused_mlp`` dispatch will actually request;
+    default resolves ``arch_id`` from the registry."""
+    from ..core.workloads import arch_decode_chains, config_decode_chains
+
+    def rows(batch):
+        chains = (config_decode_chains(cfg, batch=batch) if cfg is not None
+                  else arch_decode_chains(arch_id, batch=batch,
+                                          cache_len=cache_len))
+        out = []
+        for _, chain, _ in chains:
+            dims = (chain.M, chain.inter_width, chain.producer.Lz,
+                    chain.consumer.Ly)
+            if dims not in out:
+                out.append(dims)
+        return out
+
+    groups = {f"chunk{w}": rows(w) for w in chunk_widths}
+    groups["decode"] = rows(slots)
+    return groups
 
 
 def serving_plan_shapes(arch_id: str, *, batch: int, prompt_len: int,

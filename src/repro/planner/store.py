@@ -28,11 +28,16 @@ import time
 from typing import Iterator
 
 from ..core.certificate import Certificate
+from ..core.fusion import ChainCertificate, GemmChain
 from ..core.geometry import Gemm, Mapping
 from ..core.hardware import AcceleratorSpec, Ert
 from ..core.solver import SOLVER_VERSION
 
 SCHEMA_VERSION = 1
+# Fused (chain) entries carry their own schema: the chain objective and
+# compatibility-constraint semantics can evolve independently of the
+# single-GEMM plan format.
+CHAIN_SCHEMA_VERSION = 1
 
 # Environment variable consumed by read-through integration points
 # (core/tpu_mapping, serving.Engine): points at a store root directory.
@@ -95,6 +100,54 @@ def plan_key(gemm: Gemm, hw: AcceleratorSpec, *, objective: str = "energy",
                    spatial_mode=spatial_mode,
                    allowed_walk01=tuple(allowed_walk01)
                    if allowed_walk01 is not None else None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainKey:
+    """The semantic identity of one chain solve (chain-hash key)."""
+
+    producer_dims: tuple[int, int, int]
+    consumer_dims: tuple[int, int, int]
+    producer_count: int
+    elementwise: str
+    hw: AcceleratorSpec
+    objective: str = "energy"
+    spatial_mode: str | None = None
+    allowed_walk01: tuple[str, ...] | None = None
+    solver_version: str = SOLVER_VERSION
+
+    def payload(self) -> dict:
+        return {
+            "chain_schema": CHAIN_SCHEMA_VERSION,
+            "solver_version": self.solver_version,
+            "producer": list(self.producer_dims),
+            "consumer": list(self.consumer_dims),
+            "producer_count": self.producer_count,
+            "elementwise": self.elementwise,
+            "hw": _hw_identity(self.hw),
+            "objective": self.objective,
+            "spatial_mode": self.spatial_mode,
+            "allowed_walk01": (list(self.allowed_walk01)
+                               if self.allowed_walk01 is not None else None),
+        }
+
+    @property
+    def digest(self) -> str:
+        return _digest_of(self.payload())
+
+
+def chain_plan_key(chain: GemmChain, hw: AcceleratorSpec, *,
+                   objective: str = "energy",
+                   spatial_mode: str | None = None,
+                   allowed_walk01: tuple[str, ...] | None = None
+                   ) -> ChainKey:
+    return ChainKey(producer_dims=chain.producer.dims,
+                    consumer_dims=chain.consumer.dims,
+                    producer_count=chain.producer_count,
+                    elementwise=chain.elementwise, hw=hw,
+                    objective=objective, spatial_mode=spatial_mode,
+                    allowed_walk01=tuple(allowed_walk01)
+                    if allowed_walk01 is not None else None)
 
 
 # ---------------------------------------------------------------------------
@@ -170,6 +223,122 @@ def certificate_from_json(d: dict) -> Certificate:
         engine=d.get("engine", "reference"))
 
 
+def chain_certificate_to_json(c: ChainCertificate) -> dict:
+    return {
+        "chain_name": c.chain_name,
+        "producer_dims": list(c.producer_dims),
+        "consumer_dims": list(c.consumer_dims),
+        "producer_count": c.producer_count,
+        "elementwise": c.elementwise,
+        "hw_name": c.hw_name,
+        "fused": c.fused,
+        "bm": c.bm,
+        "objective": c.objective,
+        "upper_bound": c.upper_bound,
+        "lower_bound": c.lower_bound,
+        "unfused_objective": c.unfused_objective,
+        "credit": c.credit,
+        "feasible": c.feasible,
+        "n_solves": c.n_solves,
+        "bm_candidates": c.bm_candidates,
+        "solve_time_s": c.solve_time_s,
+        "engine": c.engine,
+        "objective_kind": c.objective_kind,
+        "producer_certificate": (certificate_to_json(c.producer_certificate)
+                                 if c.producer_certificate else None),
+        "consumer_certificate": (certificate_to_json(c.consumer_certificate)
+                                 if c.consumer_certificate else None),
+    }
+
+
+def chain_certificate_from_json(d: dict) -> ChainCertificate:
+    return ChainCertificate(
+        chain_name=d["chain_name"],
+        producer_dims=tuple(d["producer_dims"]),
+        consumer_dims=tuple(d["consumer_dims"]),
+        producer_count=d["producer_count"],
+        elementwise=d["elementwise"], hw_name=d["hw_name"],
+        fused=d["fused"], bm=d["bm"], objective=d["objective"],
+        upper_bound=d["upper_bound"], lower_bound=d["lower_bound"],
+        unfused_objective=d["unfused_objective"], credit=d["credit"],
+        feasible=d["feasible"], n_solves=d["n_solves"],
+        bm_candidates=d["bm_candidates"],
+        solve_time_s=d["solve_time_s"], engine=d["engine"],
+        objective_kind=d.get("objective_kind", "energy"),
+        producer_certificate=(certificate_from_json(d["producer_certificate"])
+                              if d.get("producer_certificate") else None),
+        consumer_certificate=(certificate_from_json(d["consumer_certificate"])
+                              if d.get("consumer_certificate") else None))
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPlanEntry:
+    """One stored chain solve: both link mappings plus the zero-gap chain
+    certificate, self-describing like ``PlanEntry`` (full spec embedded).
+    Lives under ``<root>/fused/`` so single-GEMM iteration/indexing never
+    sees chain entries."""
+
+    digest: str
+    producer_dims: tuple[int, int, int]
+    consumer_dims: tuple[int, int, int]
+    producer_count: int
+    elementwise: str
+    hw: AcceleratorSpec
+    producer_mapping: Mapping | None
+    consumer_mapping: Mapping | None
+    certificate: ChainCertificate
+    created_unix: float
+
+    @property
+    def fused(self) -> bool:
+        return self.certificate.fused
+
+    @property
+    def feasible(self) -> bool:
+        return self.certificate.feasible
+
+    def to_json(self) -> dict:
+        return {
+            "chain_schema": CHAIN_SCHEMA_VERSION,
+            "kind": "fused",
+            "digest": self.digest,
+            "producer_dims": list(self.producer_dims),
+            "consumer_dims": list(self.consumer_dims),
+            "producer_count": self.producer_count,
+            "elementwise": self.elementwise,
+            "hw": spec_to_json(self.hw),
+            "producer_mapping": mapping_to_json(self.producer_mapping),
+            "consumer_mapping": mapping_to_json(self.consumer_mapping),
+            "certificate": chain_certificate_to_json(self.certificate),
+            "created_unix": self.created_unix,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FusedPlanEntry":
+        return cls(digest=d["digest"],
+                   producer_dims=tuple(d["producer_dims"]),
+                   consumer_dims=tuple(d["consumer_dims"]),
+                   producer_count=d["producer_count"],
+                   elementwise=d["elementwise"],
+                   hw=spec_from_json(d["hw"]),
+                   producer_mapping=mapping_from_json(d["producer_mapping"]),
+                   consumer_mapping=mapping_from_json(d["consumer_mapping"]),
+                   certificate=chain_certificate_from_json(d["certificate"]),
+                   created_unix=d["created_unix"])
+
+    @classmethod
+    def from_solve(cls, key: ChainKey, result,
+                   hw: AcceleratorSpec) -> "FusedPlanEntry":
+        return cls(digest=key.digest, producer_dims=key.producer_dims,
+                   consumer_dims=key.consumer_dims,
+                   producer_count=key.producer_count,
+                   elementwise=key.elementwise, hw=hw,
+                   producer_mapping=result.producer_mapping,
+                   consumer_mapping=result.consumer_mapping,
+                   certificate=result.certificate,
+                   created_unix=time.time())
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanEntry:
     """One stored solve — self-describing (full spec embedded) so a store
@@ -239,6 +408,7 @@ class PlanStore:
         self.root = pathlib.Path(root)
         (self.root / "objects").mkdir(parents=True, exist_ok=True)
         self._mem: dict[str, PlanEntry] = {}
+        self._fused_mem: dict[str, FusedPlanEntry] = {}
         # family_digest -> [digest]; built lazily on the first
         # nearest_neighbor call, maintained by put()
         self._family_index: dict[str, list[str]] | None = None
@@ -300,6 +470,56 @@ class PlanStore:
                 fam.append(entry.digest)
         self.puts += 1
 
+    # -- fused (chain) entries ---------------------------------------------
+    def _fused_path(self, digest: str) -> pathlib.Path:
+        return self.root / "fused" / digest[:2] / f"{digest}.json"
+
+    def get_fused(self, key: "ChainKey | str") -> FusedPlanEntry | None:
+        digest = key if isinstance(key, str) else key.digest
+        entry = self._fused_mem.get(digest)
+        if entry is None:
+            path = self._fused_path(digest)
+            if path.exists():
+                try:
+                    entry = FusedPlanEntry.from_json(
+                        json.loads(path.read_text()))
+                except (json.JSONDecodeError, KeyError):
+                    entry = None
+                if entry is not None:
+                    self._fused_mem[digest] = entry
+        if entry is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def put_fused(self, entry: FusedPlanEntry) -> None:
+        path = self._fused_path(entry.digest)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        blob = json.dumps(entry.to_json(), sort_keys=True, indent=1)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(blob)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self._fused_mem[entry.digest] = entry
+        self.puts += 1
+
+    def fused_entries(self) -> Iterator[FusedPlanEntry]:
+        for path in sorted((self.root / "fused").glob("*/*.json")):
+            entry = self.get_fused(path.stem)
+            if entry is not None:
+                yield entry
+
+    def num_fused(self) -> int:
+        fused = self.root / "fused"
+        return sum(1 for _ in fused.glob("*/*.json")) if fused.exists() \
+            else 0
+
     # -- inspection --------------------------------------------------------
     def entries(self) -> Iterator[PlanEntry]:
         for path in sorted((self.root / "objects").glob("*/*.json")):
@@ -316,6 +536,7 @@ class PlanStore:
 
     def stats(self) -> dict:
         return {"root": str(self.root), "entries": len(self),
+                "fused_entries": self.num_fused(),
                 "hits": self.hits, "misses": self.misses, "puts": self.puts}
 
     # -- warm-start support ------------------------------------------------
@@ -359,8 +580,10 @@ def resolve_default_store() -> PlanStore | None:
 # Ert is re-exported so batch workers can rebuild specs without importing
 # core.hardware directly (keeps the subprocess import surface small).
 __all__ = [
-    "Ert", "PLAN_DB_ENV", "PlanEntry", "PlanKey", "PlanStore",
+    "CHAIN_SCHEMA_VERSION", "ChainKey", "Ert", "FusedPlanEntry",
+    "PLAN_DB_ENV", "PlanEntry", "PlanKey", "PlanStore",
     "SCHEMA_VERSION", "certificate_from_json", "certificate_to_json",
-    "mapping_from_json", "mapping_to_json", "plan_key",
+    "chain_certificate_from_json", "chain_certificate_to_json",
+    "chain_plan_key", "mapping_from_json", "mapping_to_json", "plan_key",
     "resolve_default_store",
 ]

@@ -130,6 +130,27 @@ class Engine:
             return len(shapes)
         return prewarm_tpu_plans(shapes, store, dtype_bytes=dtype_bytes)
 
+    def prewarm_chains(self, chains, *,
+                       dtype_bytes: int | None = None) -> int:
+        """Plan an explicit fused-MLP chain list ((M, FF, K, N2) shapes)
+        through the installed store's fused section (or the in-process
+        cache).  The fused counterpart of ``prewarm_shapes``: after this,
+        a ``fused_mlp``-routed model resolves every chain plan from
+        cache — zero chain solves in steady state."""
+        from ..planner.batch import prewarm_fused_plans
+        from ..planner.store import resolve_default_store
+        if dtype_bytes is None:
+            dtype_bytes = self.dispatch_dtype_bytes
+        chains = list(chains)
+        store = (self.plan_store if self.plan_store is not None
+                 else resolve_default_store())
+        if store is None:
+            from ..core.tpu_mapping import plan_fused_mlp
+            for c in chains:        # in-process lru warm only
+                plan_fused_mlp(*c, dtype_bytes=dtype_bytes)
+            return len(chains)
+        return prewarm_fused_plans(chains, store, dtype_bytes=dtype_bytes)
+
     @property
     def dispatch_dtype_bytes(self) -> int:
         """The dtype under which this engine's GEMMs dispatch (plan

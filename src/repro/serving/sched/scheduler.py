@@ -130,19 +130,35 @@ class ContinuousScheduler:
         # so steady-state traffic never invokes the solver
         self.arch_id = arch_id
         self._plan_groups: dict[str, list[tuple[int, int, int]]] = {}
+        self._chain_groups: dict[str, list[tuple[int, int, int, int]]] = {}
         self._resolved_groups: set[str] = set()
         self.prewarmed_plans = 0
+        self.prewarmed_chains = 0
         if arch_id is not None:
             self.prewarmed_plans = self._prewarm(arch_id)
 
     # ------------------------------------------------------------ plan DB
     def _prewarm(self, arch_id: str) -> int:
-        from ...planner.batch import (bucketed_serving_plan_shape_groups,
+        from ...planner.batch import (bucketed_serving_fused_chain_groups,
+                                      bucketed_serving_plan_shape_groups,
                                       flatten_shape_groups)
         self._plan_groups = bucketed_serving_plan_shape_groups(
             arch_id, slots=self.cfg.slots,
             chunk_widths=self.buckets.chunk_widths,
             cache_len=self.engine.cfg.cache_len)
+        if getattr(self.engine.model.cfg, "fused_mlp", False):
+            # a fused-MLP model dispatches one chain plan per bucket
+            # group instead of the per-GEMM gate/up/down tilings; the
+            # same #widths+1 bound applies (DESIGN.md §Fusion).  Chains
+            # derive from the engine's *own* model config so prewarm
+            # matches dispatch even for smoke/reduced variants.
+            self._chain_groups = bucketed_serving_fused_chain_groups(
+                arch_id, slots=self.cfg.slots,
+                chunk_widths=self.buckets.chunk_widths,
+                cache_len=self.engine.cfg.cache_len,
+                cfg=self.engine.model.cfg)
+            self.prewarmed_chains = self.engine.prewarm_chains(
+                flatten_shape_groups(self._chain_groups))
         return self.engine.prewarm_shapes(
             flatten_shape_groups(self._plan_groups))
 
@@ -153,10 +169,13 @@ class ContinuousScheduler:
         if group in self._resolved_groups or \
                 not (self.cfg.resolve_plans and self._plan_groups):
             return
-        from ...core.tpu_mapping import plan_gemm_tiling
+        from ...core.tpu_mapping import plan_fused_mlp, plan_gemm_tiling
         for (M, N, K) in self._plan_groups.get(group, ()):
             plan_gemm_tiling(M, N, K,
                              dtype_bytes=self.engine.dispatch_dtype_bytes)
+        for (M, FF, K, N2) in self._chain_groups.get(group, ()):
+            plan_fused_mlp(M, FF, K, N2,
+                           dtype_bytes=self.engine.dispatch_dtype_bytes)
         self._resolved_groups.add(group)
 
     # ---------------------------------------------------------- admission

@@ -81,6 +81,56 @@ def test_breakdown_matches_counts():
     assert bd.normalized > 0
 
 
+def test_three_way_consistency_on_chain_links():
+    """The fused planner's chain-link mappings — producer with the
+    N-tile pinned full + P SRAM-resident, consumer with the K-tile
+    pinned full + A SRAM-resident — obey the same three-way model
+    equality as free mappings (seeded twin of the hypothesis lane in
+    test_property.py, so the invariant is exercised without hypothesis
+    installed)."""
+    from repro.core.fusion import mlp_chain
+    rng = random.Random(11)
+    checked = 0
+    for m_rows, ff, d_model in [(4, 8, 6), (8, 6, 4), (6, 12, 2),
+                                (2, 4, 9)]:
+        chain = mlp_chain(m_rows, ff, d_model)
+        for _ in range(25):
+            bm = rng.choice(divisor_chains(chain.M))[0]
+            if rng.random() < 0.5:     # producer under the chain pins
+                gemm = chain.producer
+                pin_l1 = (bm, chain.inter_width, None)
+                forced = 2             # P resident
+            else:                      # consumer under the chain pins
+                gemm = chain.consumer
+                pin_l1 = (bm, None, chain.inter_width)
+                forced = 1             # A resident
+            chains = []
+            for d in range(3):
+                opts = divisor_chains(gemm.dims[d])
+                if pin_l1[d] is not None:
+                    opts = tuple(c for c in opts if c[0] == pin_l1[d])
+                chains.append(rng.choice(opts))
+            res1 = tuple(True if d == forced else rng.random() < 0.7
+                         for d in range(3))
+            m = Mapping(
+                L1=tuple(c[0] for c in chains),
+                L2=tuple(c[1] for c in chains),
+                L3=tuple(c[2] for c in chains),
+                alpha01=rng.choice(AXES), alpha12=rng.choice(AXES),
+                res1=res1,
+                res3=tuple(rng.random() < 0.7 for _ in range(3)))
+            cf = analytical_counts(gemm, m)
+            assert cf.isclose(reference_counts(gemm, m,
+                                               full_reuse=False)), (gemm, m)
+            full = reference_counts(gemm, m, full_reuse=True)
+            sim = simulate_counts(gemm, m)
+            assert full.isclose(sim), (gemm, m)
+            if closed_form_is_exact(gemm, m):
+                assert cf.isclose(sim), (gemm, m)
+                checked += 1
+    assert checked > 15
+
+
 def test_rho_boundary_cases():
     """alpha01 = z: partial sums leave SRAM exactly once per element."""
     gemm = Gemm(8, 8, 8)

@@ -6,13 +6,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.tpu_mapping import MXU, plan_gemm_tiling, tpu_spec
-from repro.kernels.ops import gemm
+from repro.core.tpu_mapping import (MXU, FusedTilePlan, TpuTilePlan,
+                                    plan_fused_mlp, plan_gemm_tiling,
+                                    tpu_spec)
+from repro.kernels.goma_gemm import goma_matmul
+from repro.kernels.ops import fused_mlp, fused_mlp_composition, gemm
 from repro.kernels.ref import matmul_ref, ssd_ref, wkv6_ref
 
 SHAPES = [(128, 128, 128), (256, 512, 128), (300, 200, 100),
           (512, 384, 1024), (1024, 256, 2048), (64, 4096, 512)]
 DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.1).astype(dtype)
 
 
 @pytest.mark.parametrize("shape", SHAPES)
@@ -29,6 +36,123 @@ def test_goma_gemm_vs_ref(shape, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32),
                                rtol=tol, atol=tol)
+
+
+# --- kernel numerics matrix: goma_matmul + fused kernel -------------------
+# odd / non-divisor-rich shapes alongside MXU-friendly ones; the fused
+# matrix also pins the nk == 1 fast path and the multi-k scratch path
+# via handcrafted plans (deterministic, VMEM-size-independent).
+
+MATRIX_SHAPES = [(128, 128, 128), (300, 200, 100), (129, 257, 65),
+                 (100, 50, 1), (256, 384, 512)]
+
+
+@pytest.mark.parametrize("shape", MATRIX_SHAPES,
+                         ids=[f"{m}x{n}x{k}" for m, n, k in MATRIX_SHAPES])
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_goma_gemm_matrix(shape, dtype):
+    M, N, K = shape
+    a = _rand(jax.random.PRNGKey(0), (M, K), dtype)
+    b = _rand(jax.random.PRNGKey(1), (K, N), dtype)
+    out = gemm(a, b, interpret=True)
+    ref = matmul_ref(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", MATRIX_SHAPES,
+                         ids=[f"{m}x{n}x{k}" for m, n, k in MATRIX_SHAPES])
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_fused_mlp_matrix(shape, dtype):
+    """Fused kernel vs jnp reference AND bit-identical to the unfused
+    two-goma_matmul composition under the plan's compatibility tiles."""
+    M, FF, K = shape
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    a = _rand(ks[0], (M, K), dtype)
+    wg = _rand(ks[1], (K, FF), dtype)
+    wu = _rand(ks[2], (K, FF), dtype)
+    wd = _rand(ks[3], (FF, K), dtype)
+    out = fused_mlp(a, wg, wu, wd, interpret=True)
+    ref = fused_mlp(a, wg, wu, wd, force_xla=True)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+    plan = plan_fused_mlp(M, FF, K,
+                          dtype_bytes=jnp.dtype(dtype).itemsize)
+    if plan.fused:
+        comp = fused_mlp_composition(a, wg, wu, wd, plan, interpret=True)
+        assert np.array_equal(np.asarray(out), np.asarray(comp)), (
+            shape, dtype)
+
+
+def _manual_fused_plan(M, FF, K, bm, bk):
+    return FusedTilePlan(M=M, FF=FF, K=K, N2=K, padded=(M, FF, K, K),
+                         fused=True, bm=bm, bk=bk, objective=0.0,
+                         unfused_objective=0.0, solve_time_s=0.0)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+@pytest.mark.parametrize("bm,bk,label", [
+    (128, 128, "single_k"),        # nk == 1 fast path (no scratch)
+    (128, 64, "multi_k"),          # VMEM scratch accumulation path
+    (64, 32, "multi_m_multi_k"),   # both grid dims > 1
+])
+def test_fused_kernel_grid_paths(dtype, bm, bk, label):
+    """The fused kernel's nk==1 fast path and scratch-accumulation path
+    are bit-identical to the composition built from the same tiles."""
+    M, FF, K = 128, 256, 128
+    plan = _manual_fused_plan(M, FF, K, bm, bk)
+    nm, nk = plan.grid
+    assert (nk == 1) == (label == "single_k")
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    a = _rand(ks[0], (M, K), dtype)
+    wg = _rand(ks[1], (K, FF), dtype)
+    wu = _rand(ks[2], (K, FF), dtype)
+    wd = _rand(ks[3], (FF, K), dtype)
+    out = fused_mlp(a, wg, wu, wd, plan=plan, interpret=True)
+    comp = fused_mlp_composition(a, wg, wu, wd, plan, interpret=True)
+    assert np.array_equal(np.asarray(out), np.asarray(comp)), label
+    ref = fused_mlp(a, wg, wu, wd, force_xla=True)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bk,expect_single", [(128, True), (64, False)])
+def test_goma_gemm_nk1_fast_path(bk, expect_single):
+    """goma_matmul's nk==1 path (direct block write, no accumulator
+    scratch) computes the same result as the accumulated path."""
+    M = N = K = 128
+    plan = TpuTilePlan(M=M, N=N, K=K, padded=(M, N, K),
+                       block=(128, 128, bk), grid_order=("m", "n", "k"),
+                       walk="z", objective=0.0, solve_time_s=0.0)
+    nk = K // bk
+    assert (nk == 1) == expect_single
+    a = _rand(jax.random.PRNGKey(4), (M, K), jnp.float32)
+    b = _rand(jax.random.PRNGKey(5), (K, N), jnp.float32)
+    out = goma_matmul(a, b, plan, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(matmul_ref(a, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("activation", ["silu_mul", "gelu_mul",
+                                        "sqrelu_mul"])
+def test_fused_mlp_activations(activation):
+    M, FF, K = 128, 128, 128
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    a = _rand(ks[0], (M, K), jnp.float32)
+    wg = _rand(ks[1], (K, FF), jnp.float32)
+    wu = _rand(ks[2], (K, FF), jnp.float32)
+    wd = _rand(ks[3], (FF, K), jnp.float32)
+    out = fused_mlp(a, wg, wu, wd, activation=activation, interpret=True)
+    ref = fused_mlp(a, wg, wu, wd, activation=activation, force_xla=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_plan_respects_hardware_constraints():

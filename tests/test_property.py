@@ -9,9 +9,10 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (EYERISS_LIKE, Gemm, Mapping, analytical_counts,
-                        analytical_energy, reference_counts,
-                        simulate_counts)
+                        analytical_energy, closed_form_is_exact,
+                        reference_counts, simulate_counts)
 from repro.core.energy import rho_terms
+from repro.core.fusion import mlp_chain
 from repro.core.geometry import AXES, canonical_walk, divisor_chains
 
 
@@ -85,3 +86,74 @@ def test_macc_count_equals_volume(gm, _):
     gemm, m = gm
     assert analytical_counts(gemm, m).macc == gemm.volume
     assert simulate_counts(gemm, m).macc == gemm.volume
+
+
+# ---------------------------------------------------------------------------
+# three-way model equality on random feasible mappings (chain links too)
+# ---------------------------------------------------------------------------
+
+def _draw_mapping(draw, gemm, *, pin_l1=None, pin_res1=None):
+    """A divisibility-valid random mapping; optional L1 pins / forced
+    res1 bits reproduce the chain solver's compatibility constraints."""
+    chains = []
+    for d in range(3):
+        opts = divisor_chains(gemm.dims[d])
+        if pin_l1 is not None and pin_l1[d] is not None:
+            opts = tuple(c for c in opts if c[0] == pin_l1[d])
+        chains.append(draw(st.sampled_from(opts)))
+    res1 = tuple(
+        True if (pin_res1 is not None and pin_res1[d])
+        else draw(st.booleans()) for d in range(3))
+    return Mapping(
+        L1=tuple(c[0] for c in chains), L2=tuple(c[1] for c in chains),
+        L3=tuple(c[2] for c in chains),
+        alpha01=draw(st.sampled_from(AXES)),
+        alpha12=draw(st.sampled_from(AXES)),
+        res1=res1,
+        res3=tuple(draw(st.booleans()) for _ in range(3)))
+
+
+@st.composite
+def chain_link_and_mapping(draw):
+    """A random mapping of a random MLP-chain link — producer, consumer,
+    or the same links under the chain solver's residency pins (the
+    'chain intermediate' mappings the fused objective prices)."""
+    m_rows = draw(st.sampled_from([2, 4, 6, 8]))
+    ff = draw(st.sampled_from([4, 6, 8, 12]))
+    d_model = draw(st.sampled_from([2, 4, 6, 9]))
+    chain = mlp_chain(m_rows, ff, d_model)
+    kind = draw(st.sampled_from(
+        ["producer", "consumer", "producer_pinned", "consumer_pinned"]))
+    gemm = chain.producer if kind.startswith("producer") else chain.consumer
+    if kind == "producer_pinned":
+        bm = draw(st.sampled_from(
+            [c[0] for c in divisor_chains(chain.M)]))
+        m = _draw_mapping(draw, gemm, pin_l1=(bm, chain.inter_width, None),
+                          pin_res1=(False, False, True))
+    elif kind == "consumer_pinned":
+        bm = draw(st.sampled_from(
+            [c[0] for c in divisor_chains(chain.M)]))
+        m = _draw_mapping(draw, gemm, pin_l1=(bm, None, chain.inter_width),
+                          pin_res1=(False, True, False))
+    else:
+        m = _draw_mapping(draw, gemm)
+    return gemm, m
+
+
+@settings(max_examples=120, deadline=None)
+@given(chain_link_and_mapping())
+def test_three_way_counts_on_chain_links(gm):
+    """analytical == no-reuse reference (identity), full-reuse reference
+    == simulator (ground truth), analytical == simulator whenever the
+    exactness predicate holds — on random feasible mappings over chain
+    link GEMMs, including the residency-pinned mappings the chain solver
+    searches (replaces the fixed-case-only coverage)."""
+    gemm, m = gm
+    m.validate(gemm)
+    cf = analytical_counts(gemm, m)
+    assert cf.isclose(reference_counts(gemm, m, full_reuse=False)), (gemm, m)
+    full = reference_counts(gemm, m, full_reuse=True)
+    sim = simulate_counts(gemm, m)
+    assert full.isclose(sim), (gemm, m)
+    if closed_form_is_exact(gemm, m):
+        assert cf.isclose(sim), (gemm, m)

@@ -219,6 +219,45 @@ def test_zero_solver_invocations_steady_state(setup, tmp_path):
         tpu_mapping.set_plan_store(None)
 
 
+def test_fused_mlp_scheduler_prewarms_chains(tmp_path):
+    """A fused-MLP model's scheduler prewarms the bucketed fused chain
+    plans (one per bucket group) alongside the per-GEMM tilings; steady
+    state then runs with zero solver invocations — chain solves included
+    — and stays token-identical to the static oracle of the same
+    model."""
+    import dataclasses
+    from repro.core import tpu_mapping
+    cfg = dataclasses.replace(get_config("llama3-8b", smoke=True),
+                              fused_mlp=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = Engine(model, params,
+                    ServeConfig(max_new_tokens=6, cache_len=CACHE))
+    oracle = Engine(model, params,
+                    ServeConfig(max_new_tokens=6, cache_len=CACHE))
+    store = PlanStore(tmp_path)
+    engine.plan_store = store
+    try:
+        clock = TraceClock()
+        sched = ContinuousScheduler(
+            engine, SchedConfig(slots=2, chunk_widths=(4, 16)),
+            arch_id="llama3-8b", clock=clock.now)
+        assert sched.prewarmed_chains > 0
+        assert store.num_fused() > 0          # fused section populated
+        reset_solver_stats()
+        rng = np.random.default_rng(3)
+        reqs = [Request(req_id=i,
+                        tokens=rng.integers(0, cfg.vocab, (10,)),
+                        max_new_tokens=4, arrival_s=0.0)
+                for i in range(3)]
+        results = replay(sched, reqs, clock)
+        assert solver_stats()["calls"] == 0   # no GEMM or chain solves
+        _check_against_oracle(results, reqs, oracle)
+    finally:
+        engine.plan_store = None
+        tpu_mapping.set_plan_store(None)
+
+
 def test_prewarm_dtype_mismatch_misses(setup, tmp_path, monkeypatch):
     """Plan identity includes the dtype-rescaled VMEM capacity: plans
     prewarmed under the wrong dtype_bytes miss at dispatch time; the

@@ -1,0 +1,95 @@
+"""Randomized engine-equivalence fuzz (hypothesis-driven).
+
+The vectorized frontier engine must be *bit-identical* to the reference
+DFS on every instance — the 22-case curated corpus in
+tests/test_solver_engines.py pins the structural features; this module
+sweeps the cross-product randomly: (Gemm, AcceleratorSpec, objective,
+bypass, walk restriction, chain-solver pins) tuples, asserting identical
+optimum / mapping / zero-gap certificate.
+
+Two lanes: a small seeded sample in the CI fast lane and a `slow`-marked
+deep lane (same strategy, many more examples).  ``derandomize=True``
+keeps both reproducible run-to-run (no example database dependence).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Gemm  # noqa: E402
+from repro.core.geometry import divisors  # noqa: E402
+from repro.core.hardware import AcceleratorSpec, Ert  # noqa: E402
+from repro.core.solver import solve  # noqa: E402
+
+ERTS = [
+    Ert(dram_read=200.0, dram_write=200.0, sram_read=6.0, sram_write=6.5,
+        rf_read=1.0, rf_write=1.1, macc=2.0, sram_leak=0.1, rf_leak=0.001),
+    Ert(dram_read=130.0, dram_write=110.0, sram_read=3.1, sram_write=3.4,
+        rf_read=0.12, rf_write=0.12, macc=0.55, spatial_reduce=0.05),
+]
+
+DIMS = [2, 3, 4, 5, 6, 8, 9, 12, 16, 18, 24]
+WALKS = [None, ("z",), ("x",), ("x", "y"), ("y", "z")]
+
+
+@st.composite
+def solve_instance(draw):
+    gemm = Gemm(draw(st.sampled_from(DIMS)), draw(st.sampled_from(DIMS)),
+                draw(st.sampled_from(DIMS)))
+    hw = AcceleratorSpec(
+        name="fuzz",
+        sram_words=draw(st.sampled_from([48, 96, 256, 1024, 4096])),
+        rf_words=draw(st.sampled_from([2, 4, 8, 16, 32])),
+        num_pe=draw(st.sampled_from([4, 8, 16])),
+        ert=draw(st.sampled_from(ERTS)),
+        allow_bypass=draw(st.booleans()),
+        spatial_equality=draw(st.booleans()))
+    kw = {}
+    if draw(st.booleans()):
+        kw["objective"] = "edp"
+        kw["spatial_mode"] = "le"
+    elif draw(st.booleans()):
+        kw["spatial_mode"] = "le"
+    walk = draw(st.sampled_from(WALKS))
+    if walk is not None:
+        kw["allowed_walk01"] = walk
+    # the chain solver's constraint surface: per-axis L1 pins (drawn from
+    # the axis's divisor lattice so the pin is satisfiable) + forced
+    # SRAM residency bits
+    if draw(st.booleans()):
+        kw["fixed_l1"] = tuple(
+            draw(st.sampled_from((None,) + divisors(gemm.dims[d])))
+            for d in range(3))
+    if draw(st.booleans()):
+        kw["require_res1"] = tuple(draw(st.booleans()) for _ in range(3))
+    return gemm, hw, kw
+
+
+def assert_engines_identical(gemm, hw, kw):
+    ref = solve(gemm, hw, engine="reference", **kw)
+    vec = solve(gemm, hw, engine="vectorized", **kw)
+    cr, cv = ref.certificate, vec.certificate
+    assert cr.feasible == cv.feasible, (gemm, hw, kw)
+    assert cr.spatial_mode == cv.spatial_mode
+    assert cr.objective_kind == cv.objective_kind
+    assert cr.objective == cv.objective, (gemm, hw, kw)
+    assert cr.upper_bound == cv.upper_bound
+    assert cr.lower_bound == cv.lower_bound
+    if cr.feasible:
+        assert cr.gap == 0.0 and cv.gap == 0.0
+        assert ref.mapping == vec.mapping, (gemm, hw, kw)
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(solve_instance())
+def test_engine_equivalence_fuzz_fast(instance):
+    gemm, hw, kw = instance
+    assert_engines_identical(gemm, hw, kw)
+
+
+@pytest.mark.slow
+@settings(max_examples=300, deadline=None, derandomize=True)
+@given(solve_instance())
+def test_engine_equivalence_fuzz_deep(instance):
+    gemm, hw, kw = instance
+    assert_engines_identical(gemm, hw, kw)
