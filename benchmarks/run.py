@@ -22,6 +22,9 @@ Suites:
              BENCH_serving.json artifact at the repo root
   fusion     fused-vs-unfused chained-GEMM (MLP gate/up->down) energy,
              EDP and kernel wall clock -> BENCH_fusion.json at the root
+  capture    jaxpr-capture front end: captured-vs-enumerated oracle +
+             end-to-end planning of the moe/ssm/rwkv model programs ->
+             BENCH_capture.json at the root
 """
 from __future__ import annotations
 
@@ -97,6 +100,9 @@ def main() -> None:
     if on("fusion"):
         import bench_fusion
         guarded("fusion", lambda: bench_fusion.run(smoke=False))
+    if on("capture"):
+        import bench_capture
+        guarded("capture", lambda: bench_capture.run(smoke=False))
     if on("roofline"):
         try:
             import bench_roofline

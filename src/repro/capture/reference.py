@@ -1,0 +1,158 @@
+"""Reference jax programs for ``LlmSpec`` models (capture oracle side).
+
+The hand-enumerated extraction tables in ``core.workloads`` encode the
+paper's modeling conventions (per-head attention instances weighted
+L x H, decode batched as M = batch rows against one modeled KV cache,
+MoE capacity-balanced per-expert token shares).  This module expresses
+the *same* conventions as actual jax programs — a prefill fn and a
+decode-step fn built from an ``LlmSpec`` — so the jaxpr capture pipeline
+can be differentially tested: capturing these programs must reproduce
+the hand-enumerated GEMM multiset *exactly*, weights included, on every
+``paper_cases()`` spec (tests/test_capture.py).
+
+These are modeling programs, not executable inference: weights are
+abstract zeros, the KV cache is a free tensor, and GQA key/value heads
+are materialized per query head (``jnp.repeat``) exactly as the paper
+prices them.  Layer stacks run under ``lax.scan`` so the capture walk
+exercises static-trip-count weight multiplication; per-head and
+per-expert GEMMs carry jaxpr batch dims so it exercises batch-dim
+flattening.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.workloads import LlmSpec
+from .program import PlanProgram, captured_program
+
+_F32 = jnp.float32
+
+
+def _score_len(spec: LlmSpec, extent: int) -> int:
+    if spec.window is not None and spec.local_ratio >= 1.0:
+        return min(extent, spec.window)
+    return extent
+
+
+def _mlp_block(spec: LlmSpec, x: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Gated MLP (or capacity-balanced MoE) on m token rows; returns the
+    block output with the same modeling shapes workloads.py prices."""
+    d, ff = spec.d_model, spec.d_ff
+    if spec.n_experts:
+        m_exp = max(1, m * spec.top_k // spec.n_experts)
+        n_mats = spec.n_experts + spec.shared_experts
+        wg = jnp.zeros((n_mats, d, ff), _F32)
+        wu = jnp.zeros((n_mats, d, ff), _F32)
+        wd = jnp.zeros((n_mats, ff, d), _F32)
+        xe = jnp.broadcast_to(x[:m_exp][None], (n_mats, m_exp, d))
+        g = jnp.einsum("emd,edf->emf", xe, wg)
+        u = jnp.einsum("emd,edf->emf", xe, wu)
+        y = jnp.einsum("emf,efd->emd", jax.nn.silu(g) * u, wd)
+        return x.at[:m_exp].add(jnp.sum(y, axis=0))
+    wg = jnp.zeros((d, ff), _F32)
+    wu = jnp.zeros((d, ff), _F32)
+    wd = jnp.zeros((ff, d), _F32)
+    g = x @ wg
+    u = x @ wu
+    return x + (jax.nn.silu(g) * u) @ wd
+
+
+def spec_prefill_fn(spec: LlmSpec, seq: int):
+    """(fn, example_args) for one prefill under the paper's conventions."""
+    L, H, KV, hd = spec.layers, spec.n_heads, spec.kv_heads, spec.head_dim
+    d, vocab = spec.d_model, spec.vocab
+    T = _score_len(spec, seq)
+    G = H // KV
+
+    def fn(x):                                   # x: (seq, d)
+        wq = jnp.zeros((d, H * hd), _F32)
+        wk = jnp.zeros((d, KV * hd), _F32)
+        wv = jnp.zeros((d, KV * hd), _F32)
+        wo = jnp.zeros((H * hd, d), _F32)
+        w_lm = jnp.zeros((d, vocab), _F32)
+
+        def layer(x, _):
+            q = x @ wq                           # (S, H*hd)
+            k = x @ wk                           # (S, KV*hd)
+            v = x @ wv
+            qh = q.reshape(seq, H, hd).transpose(1, 0, 2)
+            kh = jnp.repeat(k[:T].reshape(T, KV, hd), G,
+                            axis=1).transpose(1, 0, 2)
+            vh = jnp.repeat(v[:T].reshape(T, KV, hd), G,
+                            axis=1).transpose(1, 0, 2)
+            s = jnp.einsum("hsd,htd->hst", qh, kh)   # per-head: batch h
+            p = jax.nn.softmax(s, axis=-1)           # reduce breaks chains
+            ctx = jnp.einsum("hst,htd->hsd", p, vh)
+            attn = ctx.transpose(1, 0, 2).reshape(seq, H * hd) @ wo
+            x = x + attn
+            return _mlp_block(spec, x, seq), None
+
+        x, _ = jax.lax.scan(layer, x, None, length=L)
+        return x[seq - 1:] @ w_lm                # lm_head: last token only
+
+    return fn, (jax.ShapeDtypeStruct((seq, d), _F32),)
+
+
+def spec_decode_fn(spec: LlmSpec, batch: int, cache_len: int):
+    """(fn, example_args) for one batched decode step: every projection
+    collapses to M = batch rows, attention runs against the modeled KV
+    cache (the paper's serving-shape convention in ``decode_gemms``)."""
+    L, H, KV, hd = spec.layers, spec.n_heads, spec.kv_heads, spec.head_dim
+    d, vocab = spec.d_model, spec.vocab
+    ctx = _score_len(spec, cache_len)
+
+    def fn(x, k_cache, v_cache):                 # x: (batch, d)
+        wq = jnp.zeros((d, H * hd), _F32)
+        wk = jnp.zeros((d, KV * hd), _F32)
+        wv = jnp.zeros((d, KV * hd), _F32)
+        wo = jnp.zeros((H * hd, d), _F32)
+        w_lm = jnp.zeros((d, vocab), _F32)
+
+        def layer(x, _):
+            q = x @ wq                           # (B, H*hd)
+            k_new = x @ wk                       # cache-append projections
+            v_new = x @ wv                       # (kept live as scan ys)
+            qh = q.reshape(batch, H, hd).transpose(1, 0, 2)
+            s = jnp.einsum("hbd,htd->hbt", qh, k_cache)
+            p = jax.nn.softmax(s, axis=-1)
+            c = jnp.einsum("hbt,htd->hbd", p, v_cache)
+            attn = c.transpose(1, 0, 2).reshape(batch, H * hd) @ wo
+            x = x + attn
+            return _mlp_block(spec, x, batch), (k_new, v_new)
+
+        x, _ = jax.lax.scan(layer, x, None, length=L)
+        return x @ w_lm                          # lm_head: every row
+
+    args = (jax.ShapeDtypeStruct((batch, d), _F32),
+            jax.ShapeDtypeStruct((H, ctx, hd), _F32),
+            jax.ShapeDtypeStruct((H, ctx, hd), _F32))
+    return fn, args
+
+
+def capture_spec_prefill(spec: LlmSpec, seq: int) -> PlanProgram:
+    fn, args = spec_prefill_fn(spec, seq)
+    return captured_program(fn, *args,
+                            name=f"{spec.name}_prefill{seq}")
+
+
+def capture_spec_decode(spec: LlmSpec, batch: int,
+                        cache_len: int) -> PlanProgram:
+    fn, args = spec_decode_fn(spec, batch, cache_len)
+    return captured_program(fn, *args,
+                            name=f"{spec.name}_decode{batch}")
+
+
+def capture_spec_scenario(spec: LlmSpec, *, prefill_seqs=(),
+                          decode_batches=(), cache_len: int = 4096
+                          ) -> PlanProgram:
+    """Prefill sweep + decode shapes, merged — the captured counterpart
+    of ``workloads.scenario_program``."""
+    prog = PlanProgram(name=f"{spec.name}_scenario", gemms=[], chains=[])
+    for seq in prefill_seqs:
+        prog = prog.merged(capture_spec_prefill(spec, seq),
+                           name=prog.name)
+    for batch in decode_batches:
+        prog = prog.merged(capture_spec_decode(spec, batch, cache_len),
+                           name=prog.name)
+    return prog

@@ -79,6 +79,19 @@ class Certificate:
                 f"mode={self.spatial_mode} engine={self.engine}")
 
 
+def effective_spatial_mode(hw: AcceleratorSpec,
+                           spatial_mode: str | None = None) -> str:
+    """The spatial mode a solve on ``hw`` actually enforces: fixed
+    spatial tiles check as equality; otherwise an explicit mode wins
+    over the spec's ``spatial_equality`` default.  (The one shared
+    definition — solver, planner and chain verification must agree.)"""
+    if hw.fixed_spatial is not None:
+        return "equality"
+    if spatial_mode is not None:
+        return spatial_mode
+    return "equality" if hw.spatial_equality else "le"
+
+
 def check_constraints(gemm: Gemm, m: Mapping, hw: AcceleratorSpec,
                       *, spatial_mode: str = "equality") -> bool:
     """Hardware + mapping feasibility (paper eqs. 4, 29, 31, 32)."""

@@ -39,7 +39,8 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from .certificate import Certificate, check_constraints, objective_value
+from .certificate import (Certificate, check_constraints,
+                          effective_spatial_mode, objective_value)
 from .geometry import Gemm, Mapping, divisors
 from .hardware import AcceleratorSpec
 from .solver import DEFAULT_ENGINE, SolveResult, solve
@@ -228,8 +229,7 @@ def compatible_residency(chain: GemmChain, m1: Mapping, m2: Mapping,
     hw1 = _strip_reserved_spec(chain, hw, bm)
     if hw1 is None:
         return False
-    mode = "equality" if hw.fixed_spatial is not None else (
-        "equality" if hw.spatial_equality else "le")
+    mode = effective_spatial_mode(hw)
     # the solved links may have fallen back to le (recorded on their
     # certificates); accept either mode here — capacity is what matters
     ok1 = (check_constraints(chain.producer, m1, hw1, spatial_mode=mode)
@@ -354,6 +354,54 @@ def solve_chain(chain: GemmChain, hw: AcceleratorSpec, *,
         producer_certificate=r1u.certificate,
         consumer_certificate=r2u.certificate)
     return ChainSolveResult(r1u.mapping, r2u.mapping, cert, r1u, r2u)
+
+
+def chain_from_certificate(cert: ChainCertificate) -> GemmChain:
+    """Rebuild the GemmChain a certificate describes (store verify)."""
+    return GemmChain(
+        producer=Gemm(*cert.producer_dims, name="producer"),
+        consumer=Gemm(*cert.consumer_dims, name="consumer"),
+        producer_count=cert.producer_count,
+        elementwise=cert.elementwise, name=cert.chain_name)
+
+
+def verify_chain(cert: ChainCertificate, hw: AcceleratorSpec,
+                 producer_mapping: Mapping | None,
+                 consumer_mapping: Mapping | None, *,
+                 tol: float = 1e-9) -> bool:
+    """Independently re-verify one stored chain solve: both link
+    mappings feasible (fused: the full compatibility/residency pins via
+    ``compatible_residency``), the chain objective re-derivable from the
+    mappings (link energies +/- the residency credit), UB == LB, and the
+    headline claim — chain optimum <= sum of independent per-GEMM
+    optima.  Mirrors ``core.certificate.verify`` for single GEMMs."""
+    if not cert.feasible:
+        return producer_mapping is None or consumer_mapping is None
+    if producer_mapping is None or consumer_mapping is None:
+        return False
+    chain = chain_from_certificate(cert)
+    m1, m2 = producer_mapping, consumer_mapping
+    if cert.fused:
+        if not compatible_residency(chain, m1, m2, hw):
+            return False
+        if cert.bm is None or m1.L1[0] != cert.bm:
+            return False
+    else:
+        mode = effective_spatial_mode(hw)
+        for gemm, m in ((chain.producer, m1), (chain.consumer, m2)):
+            if not (check_constraints(gemm, m, hw, spatial_mode=mode)
+                    or check_constraints(gemm, m, hw, spatial_mode="le")):
+                return False
+    energy = (chain.producer_count * link_energy(chain.producer, m1, hw)
+              + link_energy(chain.consumer, m2, hw))
+    if cert.fused:
+        energy -= dram_roundtrip_credit(chain, hw)
+    scale = max(1.0, abs(cert.objective))
+    if abs(energy - cert.objective) > tol * scale:
+        return False
+    if cert.gap != 0.0:
+        return False
+    return cert.objective <= cert.unfused_objective * (1 + 1e-12)
 
 
 def mlp_chain(m: int, d_ff: int, d_model: int, *,

@@ -130,20 +130,39 @@ def decode_gemms(spec: LlmSpec, batch: int,
     return out
 
 
+def merge_gemm_rows(rows: "Sequence[tuple[str, Gemm, int]]"
+                    ) -> list[tuple[str, Gemm, int]]:
+    """Merge identical (Gemm, name) rows by summing repeat weights,
+    first-seen order — so a scenario never carries the same mapping
+    instance twice and the batch planner solves each unique shape once
+    (asserted via ``core.solver.solver_stats`` in the tests)."""
+    merged: dict[tuple[str, Gemm], int] = {}
+    order: list[tuple[str, Gemm]] = []
+    for gtype, gemm, w in rows:
+        key = (gtype, gemm)
+        if key in merged:
+            merged[key] += w
+        else:
+            merged[key] = w
+            order.append(key)
+    return [(t, g, merged[(t, g)]) for t, g in order]
+
+
 def scenario_gemms(spec: LlmSpec, *, prefill_seqs: Sequence[int] = (),
                    decode_batches: Sequence[int] = (),
                    cache_len: int = 4096) -> list[tuple[str, Gemm, int]]:
     """A whole serving scenario: prefill seq sweep + decode step shapes.
 
-    Returns the concatenated (type, Gemm, weight) list; duplicate shapes
-    across phases are expected — the planner deduplicates by plan key.
+    Identical (Gemm, name) rows across phases (e.g. lm_head in every
+    prefill of a sweep) are merged with summed weights; distinct names
+    over equal dims are left to the planner's content-addressed dedup.
     """
     out: list[tuple[str, Gemm, int]] = []
     for seq in prefill_seqs:
         out.extend(prefill_gemms(spec, seq))
     for batch in decode_batches:
         out.extend(decode_gemms(spec, batch, cache_len))
-    return out
+    return merge_gemm_rows(out)
 
 
 def _mlp_chain_rows(spec: LlmSpec, m: int, name: str):
@@ -294,6 +313,68 @@ def arch_gemms(arch_id: str, seq: int = 4096,
         ]
     out.append(("lm_head", Gemm(1, cfg.vocab, d, "lm_head"), 1))
     return out
+
+
+# ---------------------------------------------------------------------------
+# PlanProgram shims: the hand enumerations above expressed in the unified
+# planning IR (capture.program.PlanProgram).  These are the differential
+# oracle for jaxpr capture — capturing the reference programs of a spec
+# (capture.reference) must reproduce these multisets exactly — and the
+# uniform input every planning consumer (CLI, batch planner, serving
+# prewarm) lowers from.
+# ---------------------------------------------------------------------------
+
+def prefill_program(spec: LlmSpec, seq: int):
+    """One prefill as a PlanProgram (GEMMs + fusable chains)."""
+    from ..capture.program import PlanProgram
+    return PlanProgram.from_rows(
+        f"{spec.name}_prefill{seq}", prefill_gemms(spec, seq),
+        prefill_chains(spec, seq))
+
+
+def decode_program(spec: LlmSpec, batch: int, cache_len: int):
+    """One batched decode step as a PlanProgram."""
+    from ..capture.program import PlanProgram
+    return PlanProgram.from_rows(
+        f"{spec.name}_decode{batch}", decode_gemms(spec, batch, cache_len),
+        decode_chains(spec, batch, cache_len))
+
+
+def scenario_program(spec: LlmSpec, *, prefill_seqs: Sequence[int] = (),
+                     decode_batches: Sequence[int] = (),
+                     cache_len: int = 4096):
+    """A whole serving scenario as a PlanProgram."""
+    from ..capture.program import PlanProgram
+    chains: list = []
+    for seq in prefill_seqs:
+        chains.extend(prefill_chains(spec, seq))
+    for batch in decode_batches:
+        chains.extend(decode_chains(spec, batch, cache_len))
+    return PlanProgram.from_rows(
+        f"{spec.name}_scenario",
+        scenario_gemms(spec, prefill_seqs=prefill_seqs,
+                       decode_batches=decode_batches, cache_len=cache_len),
+        chains)
+
+
+def arch_program(arch_id: str, seq: int = 4096, batch: int = 1):
+    """One architecture prefill extraction as a PlanProgram (chains from
+    the dispatchable fused-MLP set at M = seq * batch)."""
+    from ..capture.program import PlanProgram
+    from ..configs import get_config
+    return PlanProgram.from_rows(
+        f"{arch_id}_prefill{seq}", arch_gemms(arch_id, seq=seq, batch=batch),
+        config_decode_chains(get_config(arch_id), batch=seq * batch))
+
+
+def arch_decode_program(arch_id: str, batch: int = 1,
+                        cache_len: int = 4096):
+    """One architecture decode-step extraction as a PlanProgram."""
+    from ..capture.program import PlanProgram
+    return PlanProgram.from_rows(
+        f"{arch_id}_decode{batch}",
+        arch_decode_gemms(arch_id, batch=batch, cache_len=cache_len),
+        arch_decode_chains(arch_id, batch=batch, cache_len=cache_len))
 
 
 def arch_decode_gemms(arch_id: str, batch: int = 1,

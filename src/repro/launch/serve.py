@@ -44,6 +44,12 @@ def main() -> None:
                     help="route gated-MLP blocks through the GOMA-chain-"
                          "planned fused Pallas kernel (token-identical; "
                          "fused plans prewarm through --plan-db)")
+    ap.add_argument("--prewarm-source", default="capture",
+                    choices=("capture", "enumerated"),
+                    help="plan prewarm shape source: 'capture' traces "
+                         "this deployment's own prefill/decode programs "
+                         "(jaxpr capture); 'enumerated' uses the hand "
+                         "extraction tables")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -68,7 +74,8 @@ def main() -> None:
     if store is not None:
         import time as _t
         t0 = _t.perf_counter()
-        n = eng.prewarm_plans(args.arch, args.batch, args.prompt_len)
+        n = eng.prewarm_plans(args.arch, args.batch, args.prompt_len,
+                              source=args.prewarm_source)
         print(f"plan prewarm: {n} GEMM tilings in "
               f"{_t.perf_counter() - t0:.2f}s  store={store.stats()}")
 
@@ -114,7 +121,8 @@ def _serve_continuous(args, cfg, model, params, store) -> None:
     clock = TraceClock()
     sched = ContinuousScheduler(
         eng, SchedConfig(slots=args.batch, chunk_widths=widths,
-                         temperature=args.temperature),
+                         temperature=args.temperature,
+                         prewarm_source=args.prewarm_source),
         arch_id=args.arch if store is not None else None,
         clock=clock.now)
     if store is not None:

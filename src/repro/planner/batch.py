@@ -27,7 +27,8 @@ import os
 import time
 from typing import Iterable, Sequence
 
-from ..core.certificate import check_constraints, objective_value
+from ..core.certificate import (check_constraints, effective_spatial_mode,
+                                objective_value)
 from ..core.energy import analytical_energy
 from ..core.fusion import ChainSolveResult, GemmChain, solve_chain
 from ..core.geometry import Gemm
@@ -40,12 +41,6 @@ from .store import (FusedPlanEntry, PlanEntry, PlanKey, PlanStore,
                     chain_plan_key, plan_key)
 
 
-def _effective_mode(hw: AcceleratorSpec, spatial_mode: str | None) -> str:
-    if hw.fixed_spatial is not None:
-        return "equality"          # check_constraints matches fixed_spatial
-    if spatial_mode is not None:
-        return spatial_mode
-    return "equality" if hw.spatial_equality else "le"
 
 
 def warm_incumbent(gemm: Gemm, hw: AcceleratorSpec, key: PlanKey,
@@ -60,7 +55,7 @@ def warm_incumbent(gemm: Gemm, hw: AcceleratorSpec, key: PlanKey,
     nb = store.nearest_neighbor(key)
     if nb is None or nb.mapping is None:
         return None
-    mode = _effective_mode(hw, key.spatial_mode)
+    mode = effective_spatial_mode(hw, key.spatial_mode)
     try:
         if check_constraints(gemm, nb.mapping, hw, spatial_mode=mode):
             return objective_value(gemm, nb.mapping, hw, key.objective)
@@ -210,9 +205,14 @@ class BatchReport:
 
 
 class BatchPlanner:
-    """Plans whole models/scenarios against one accelerator spec."""
+    """Plans whole models/scenarios against one accelerator spec.
 
-    def __init__(self, store: PlanStore, *, jobs: int | None = 1,
+    ``store=None`` plans without persistence: every shape still goes
+    through the same dedup + one ``solve_many`` pass, but nothing is
+    read from or written to disk (capture benchmarks, throwaway runs).
+    """
+
+    def __init__(self, store: PlanStore | None, *, jobs: int | None = 1,
                  warm_start: bool = True):
         self.store = store
         self.jobs = jobs
@@ -239,7 +239,8 @@ class BatchPlanner:
         # hit/miss split
         hits, misses = {}, {}
         for digest, slot in by_digest.items():
-            entry = self.store.get(slot["key"])
+            entry = (self.store.get(slot["key"])
+                     if self.store is not None else None)
             if entry is not None:
                 hits[digest] = entry
             else:
@@ -250,16 +251,17 @@ class BatchPlanner:
         warm = 0
         for digest, slot in misses.items():
             inc = (warm_incumbent(slot["gemm"], hw, slot["key"], self.store)
-                   if self.warm_start else None)
+                   if self.warm_start and self.store is not None else None)
             warm += inc is not None
             tasks.append(_SolveTask(
                 digest=digest, gemm=slot["gemm"], hw=hw,
                 objective=objective, spatial_mode=spatial_mode,
                 allowed_walk01=allowed_walk01, incumbent=inc))
         certs = solve_many(tasks, jobs=self.jobs)
-        for digest, cert in certs.items():
-            self.store.put(PlanEntry.from_solve(
-                misses[digest]["key"], cert, hw))
+        if self.store is not None:
+            for digest, cert in certs.items():
+                self.store.put(PlanEntry.from_solve(
+                    misses[digest]["key"], cert, hw))
         # manifest rows
         entries: list[ManifestEntry] = []
         solve_time = 0.0
@@ -273,7 +275,8 @@ class BatchPlanner:
                 weight=slot["weight"], digest=digest,
                 objective=cert.objective, feasible=cert.feasible,
                 solve_time_s=cert.solve_time_s, cached=cached,
-                warm_started=getattr(cert, "warm_started", False)))
+                warm_started=getattr(cert, "warm_started", False),
+                gap=cert.gap if cert.gap != float("inf") else -1.0))
         self.last_report = BatchReport(
             total_gemms=len(rows), unique_gemms=len(by_digest),
             hits=len(hits), solved=len(misses), warm_started=warm,

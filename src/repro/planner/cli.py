@@ -5,11 +5,17 @@
         --hw eyeriss-like --seqs 1024,8192 --decode-batches 8 \
         --store /tmp/plans --manifest /tmp/llama1b.manifest.json
 
-    # repo architectures (prefill + decode extraction)
+    # repo architectures (prefill + decode extraction), with the fused
+    # MLP chains of the scenario solved into <store>/fused/
     PYTHONPATH=src python -m repro.plan build --arch rwkv6-7b \
-        --hw tpuv1-like --seqs 4096 --store /tmp/plans
+        --hw tpuv1-like --seqs 4096 --store /tmp/plans --chains
 
     # warm run: same command again -> 100% hit rate, 0 solves
+
+    # jaxpr-capture front end: trace the actual program (a repro.models
+    # Model, or the LlmSpec reference program) and plan what it executes
+    PYTHONPATH=src python -m repro.plan capture --arch rwkv6-7b --smoke \
+        --phase prefill --seq 256 --hw eyeriss-like --store /tmp/plans
 
     PYTHONPATH=src python -m repro.plan inspect --store /tmp/plans
     PYTHONPATH=src python -m repro.plan verify --store /tmp/plans
@@ -20,10 +26,12 @@ import argparse
 import sys
 
 from ..core.certificate import verify as verify_certificate
+from ..core.fusion import verify_chain
 from ..core.hardware import TEMPLATES
-from ..core.workloads import (CENTER_MODELS, EDGE_MODELS, arch_decode_gemms,
-                              arch_gemms)
-from .batch import BatchPlanner
+from ..core.workloads import (CENTER_MODELS, EDGE_MODELS,
+                              arch_decode_gemms, arch_decode_program,
+                              arch_gemms, arch_program, scenario_program)
+from .batch import BatchPlanner, cached_solve_chain
 from .manifest import ModelMappingManifest
 from .store import PLAN_DB_ENV, PlanStore
 
@@ -47,6 +55,19 @@ def _open_store(args) -> PlanStore:
     return PlanStore(root)
 
 
+def _solve_scenario_chains(store, hw, chains) -> int:
+    """Chain-solve (type, GemmChain, weight) rows into <store>/fused/."""
+    n = 0
+    for _, chain, w in chains:
+        res = cached_solve_chain(chain, hw, store=store)
+        c = res.certificate
+        tag = f"fused(bm={c.bm})" if c.fused else "unfused"
+        print(f"[chain] w={w} {chain.describe()}: {tag} "
+              f"savings={100 * c.savings:.2f}% gap={c.gap:.3g}")
+        n += 1
+    return n
+
+
 def cmd_build(args) -> int:
     store = _open_store(args)
     hw = TEMPLATES[args.hw]
@@ -54,11 +75,24 @@ def cmd_build(args) -> int:
                            warm_start=not args.no_warm_start)
     seqs = _ints(args.seqs)
     decode = _ints(args.decode_batches) if args.decode_batches else []
+    if args.chains and args.objective != "energy":
+        # mirror capture.plan.plan_program: the chain credit is priced
+        # in absolute energy, so chain solving under another objective
+        # would silently answer a different question
+        print(f"[chains] skipped: chain solving requires "
+              f"--objective energy (got {args.objective})")
+        args.chains = False
+    chains = []
     if args.model:
         spec = MODELS[args.model]
         manifest = planner.plan_model(
             spec, hw, prefill_seqs=seqs, decode_batches=decode,
             cache_len=args.cache_len, objective=args.objective)
+        if args.chains:
+            # the PlanProgram shim owns the chain-assembly conventions
+            chains = scenario_program(
+                spec, prefill_seqs=seqs, decode_batches=decode,
+                cache_len=args.cache_len).chain_rows()
     else:
         gemms = []
         for seq in seqs:
@@ -73,12 +107,24 @@ def cmd_build(args) -> int:
             prefill_seqs=tuple(seqs), decode_batches=tuple(decode),
             cache_len=args.cache_len, entries=entries,
             solver_version=SOLVER_VERSION)
+        if args.chains:
+            # the PlanProgram shims own the chain-assembly conventions
+            for seq in seqs:
+                chains.extend(arch_program(args.arch,
+                                           seq=seq).chain_rows())
+            for b in decode:
+                chains.extend(arch_decode_program(
+                    args.arch, batch=b,
+                    cache_len=args.cache_len).chain_rows())
     rep = planner.last_report
     print(manifest.summary())
     print(f"[batch] gemms={rep.total_gemms} unique={rep.unique_gemms} "
           f"hits={rep.hits} solved={rep.solved} "
           f"warm_started={rep.warm_started} "
           f"wall={rep.wall_time_s:.2f}s solve_cpu={rep.solve_time_s:.2f}s")
+    if chains:
+        n = _solve_scenario_chains(store, hw, chains)
+        print(f"[chains] {n} chain plans in fused section")
     print(f"[store] {store.stats()}")
     if args.manifest:
         path = manifest.save(args.manifest)
@@ -86,10 +132,63 @@ def cmd_build(args) -> int:
     return 0
 
 
+def cmd_capture(args) -> int:
+    """Trace a program, lower it through the plan pass, report."""
+    from ..capture import (capture_model_decode, capture_model_prefill,
+                           capture_spec_decode, capture_spec_prefill,
+                           plan_program)
+    store = _open_store(args) if (args.store or args.use_env_store) \
+        else None
+    hw = TEMPLATES[args.hw]
+    programs = []
+    if args.model:
+        spec = MODELS[args.model]
+        if args.phase in ("prefill", "both"):
+            programs.append(capture_spec_prefill(spec, args.seq))
+        if args.phase in ("decode", "both"):
+            programs.append(capture_spec_decode(spec, args.batch,
+                                                args.cache_len))
+    else:
+        from ..configs import get_config
+        from ..models.model import build_model
+        model = build_model(get_config(args.arch, smoke=args.smoke))
+        if args.phase in ("prefill", "both"):
+            programs.append(capture_model_prefill(
+                model, args.batch, args.seq, cache_len=args.cache_len))
+        if args.phase in ("decode", "both"):
+            programs.append(capture_model_decode(model, args.batch,
+                                                 args.cache_len))
+    program = programs[0]
+    for extra in programs[1:]:
+        program = program.merged(extra)
+    print(program.summary())
+    if program.chains and args.objective != "energy":
+        print(f"[chains] skipped: chain solving requires "
+              f"--objective energy (got {args.objective})")
+    if args.verbose:
+        for pg in program.gemms:
+            print(f"  gemm {pg.dims} w={pg.weight} <- {pg.label}")
+        for pc in program.chains:
+            print(f"  chain {pc.key} w={pc.weight}")
+    plan = plan_program(program, hw, store=store, jobs=args.jobs,
+                        objective=args.objective)
+    print(plan.manifest.summary())
+    for row in plan.chain_rows:
+        print(f"  chain w={row.weight} " + row.certificate.summary())
+    if args.manifest:
+        path = plan.manifest.save(args.manifest)
+        print(f"[manifest] written to {path}")
+    if store is not None:
+        print(f"[store] {store.stats()}")
+    return 0 if plan.feasible else 1
+
+
 def cmd_inspect(args) -> int:
     store = _open_store(args)
     entries = list(store.entries())
-    print(f"[store] {store.root}: {len(entries)} plans")
+    fused = list(store.fused_entries())
+    print(f"[store] {store.root}: {len(entries)} plans, "
+          f"{len(fused)} fused chain plans")
     by_hw: dict[str, int] = {}
     for e in entries:
         by_hw[e.hw_name] = by_hw.get(e.hw_name, 0) + 1
@@ -102,6 +201,14 @@ def cmd_inspect(args) -> int:
                   f"{str(e.gemm_dims):>24s} {e.objective_kind:6s} "
                   f"obj={c.objective:.6g} t={c.solve_time_s:.3f}s "
                   f"{'warm' if c.warm_started else 'cold'}")
+        for e in sorted(fused, key=lambda e: e.producer_dims):
+            c = e.certificate
+            tag = f"fused(bm={c.bm})" if c.fused else "unfused"
+            print(f"  {e.digest[:12]} {c.hw_name:16s} "
+                  f"{e.producer_count}x{e.producer_dims}->"
+                  f"{e.consumer_dims} [{e.elementwise}] {tag} "
+                  f"obj={c.objective:.6g}pJ "
+                  f"savings={100 * c.savings:.2f}%")
     return 0
 
 
@@ -113,9 +220,20 @@ def cmd_verify(args) -> int:
         if not verify_certificate(e.certificate, e.hw):
             bad += 1
             print(f"FAIL {e.digest[:12]} {e.hw_name} {e.gemm_dims}")
+    fused_bad = fused_total = 0
+    for e in store.fused_entries():
+        fused_total += 1
+        if not verify_chain(e.certificate, e.hw, e.producer_mapping,
+                            e.consumer_mapping):
+            fused_bad += 1
+            print(f"FAIL fused {e.digest[:12]} {e.hw.name} "
+                  f"{e.producer_dims}->{e.consumer_dims}")
     print(f"[verify] {total - bad}/{total} certificates verified"
           + (f", {bad} FAILED" if bad else ""))
-    return 1 if bad else 0
+    print(f"[verify] {fused_total - fused_bad}/{fused_total} chain "
+          f"certificates verified"
+          + (f", {fused_bad} FAILED" if fused_bad else ""))
+    return 1 if bad or fused_bad else 0
 
 
 def main(argv=None) -> int:
@@ -140,17 +258,49 @@ def main(argv=None) -> int:
     b.add_argument("--jobs", type=int, default=0,
                    help="parallel solver processes (0 = cpu count)")
     b.add_argument("--no-warm-start", action="store_true")
+    b.add_argument("--chains", action="store_true",
+                   help="also chain-solve the scenario's fused-MLP "
+                        "chains into <store>/fused/")
     b.add_argument("--manifest", default=None,
                    help="write the ModelMappingManifest JSON here")
     _add_store_arg(b)
     b.set_defaults(fn=cmd_build)
+
+    c = sub.add_parser(
+        "capture", help="jaxpr-capture a program and plan it")
+    grp = c.add_mutually_exclusive_group(required=True)
+    grp.add_argument("--model", choices=sorted(MODELS),
+                     help="paper LlmSpec (captures the reference program)")
+    grp.add_argument("--arch", help="repo architecture id (captures the "
+                                    "actual repro.models program)")
+    c.add_argument("--phase", default="both",
+                   choices=("prefill", "decode", "both"))
+    c.add_argument("--seq", type=int, default=1024,
+                   help="prefill sequence length")
+    c.add_argument("--batch", type=int, default=1,
+                   help="batch rows (decode batch / prefill batch)")
+    c.add_argument("--cache-len", type=int, default=4096)
+    c.add_argument("--smoke", action="store_true",
+                   help="capture the reduced smoke config of --arch")
+    c.add_argument("--hw", default="eyeriss-like", choices=sorted(TEMPLATES))
+    c.add_argument("--objective", default="energy",
+                   choices=("energy", "edp"))
+    c.add_argument("--jobs", type=int, default=0)
+    c.add_argument("--verbose", "-v", action="store_true")
+    c.add_argument("--use-env-store", action="store_true",
+                   help=f"use ${PLAN_DB_ENV} when --store is not given "
+                        "(default: plan without persistence)")
+    c.add_argument("--manifest", default=None)
+    _add_store_arg(c)
+    c.set_defaults(fn=cmd_capture)
 
     i = sub.add_parser("inspect", help="store stats / entry listing")
     i.add_argument("--verbose", "-v", action="store_true")
     _add_store_arg(i)
     i.set_defaults(fn=cmd_inspect)
 
-    v = sub.add_parser("verify", help="re-verify every stored certificate")
+    v = sub.add_parser("verify", help="re-verify every stored certificate"
+                                      " (single-GEMM and fused chains)")
     _add_store_arg(v)
     v.set_defaults(fn=cmd_verify)
 

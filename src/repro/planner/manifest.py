@@ -29,6 +29,7 @@ class ManifestEntry:
     solve_time_s: float
     cached: bool                      # served from the store (no solve)
     warm_started: bool = False
+    gap: float = 0.0                  # certificate UB - LB (0 = exact)
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)

@@ -94,21 +94,40 @@ class Engine:
         """Greedy/temperature sampling (row-wise; rng may be None)."""
         return self._sample(logits, rng)
 
-    def prewarm_plans(self, arch_id: str, batch: int, prompt_len: int, *,
-                      dtype_bytes: int | None = None) -> int:
+    def prewarm_plans(self, arch_id: str | None, batch: int,
+                      prompt_len: int, *,
+                      dtype_bytes: int | None = None,
+                      source: str = "capture") -> int:
         """Pre-plan every GEMM tiling this deployment will hit (prefill at
         prompt_len + batched decode against the KV cache), through the
         plan database when one is installed.  After this, the serving loop
         never invokes the GOMA solver: every `kernels.ops.gemm` dispatch
         resolves its TpuTilePlan from cache.  Returns #shapes planned.
 
+        ``source="capture"`` (default) reads the shape set off the
+        engine's *own* jaxpr-traced prefill/decode programs
+        (capture.plan) — the plans match what this model actually
+        dispatches, smoke variants and frontend prefixes included, and
+        ``arch_id`` is only documentation.  ``source="enumerated"``
+        falls back to the hand-enumerated ``arch_id`` extraction tables.
+
         dtype_bytes defaults to the model's compute dtype — plan identity
         includes the dtype-rescaled VMEM capacity, so prewarming bf16
         plans for an f32 engine would all miss at dispatch time."""
-        from ..planner.batch import serving_plan_shapes
-        shapes = serving_plan_shapes(arch_id, batch=batch,
-                                     prompt_len=prompt_len,
-                                     cache_len=self.cfg.cache_len)
+        if source == "capture":
+            from ..capture.plan import serving_capture_shapes
+            shapes = serving_capture_shapes(self.model, batch, prompt_len,
+                                            self.cfg.cache_len)
+        else:
+            if arch_id is None:
+                raise ValueError(
+                    "prewarm_plans(source='enumerated') needs an arch_id "
+                    "to look up the extraction tables; only the capture "
+                    "source reads everything off the model itself")
+            from ..planner.batch import serving_plan_shapes
+            shapes = serving_plan_shapes(arch_id, batch=batch,
+                                         prompt_len=prompt_len,
+                                         cache_len=self.cfg.cache_len)
         return self.prewarm_shapes(shapes, dtype_bytes=dtype_bytes)
 
     def prewarm_shapes(self, shapes, *,

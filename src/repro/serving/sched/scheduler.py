@@ -64,6 +64,12 @@ class SchedConfig:
     rng_seed: int = 0                   # per-request sampling keys
     resolve_plans: bool = True          # resolve tile plans per tick when a
     #                                     plan store is installed
+    prewarm_source: str = "capture"     # "capture": read the per-bucket
+    #                                     GEMM groups off the engine
+    #                                     model's own jaxpr-traced
+    #                                     decode-step programs;
+    #                                     "enumerated": the hand
+    #                                     extraction tables (arch_id)
 
 
 @dataclasses.dataclass
@@ -134,7 +140,11 @@ class ContinuousScheduler:
         self._resolved_groups: set[str] = set()
         self.prewarmed_plans = 0
         self.prewarmed_chains = 0
-        if arch_id is not None:
+        # capture-source prewarm reads everything off the engine's own
+        # model, so a plan-store deployment prewarms even without an
+        # arch_id; enumerated prewarm needs the arch extraction tables
+        if arch_id is not None or (cfg.prewarm_source == "capture"
+                                   and engine.plan_store is not None):
             self.prewarmed_plans = self._prewarm(arch_id)
 
     # ------------------------------------------------------------ plan DB
@@ -142,16 +152,14 @@ class ContinuousScheduler:
         from ...planner.batch import (bucketed_serving_fused_chain_groups,
                                       bucketed_serving_plan_shape_groups,
                                       flatten_shape_groups)
-        self._plan_groups = bucketed_serving_plan_shape_groups(
-            arch_id, slots=self.cfg.slots,
-            chunk_widths=self.buckets.chunk_widths,
-            cache_len=self.engine.cfg.cache_len)
         if getattr(self.engine.model.cfg, "fused_mlp", False):
             # a fused-MLP model dispatches one chain plan per bucket
             # group instead of the per-GEMM gate/up/down tilings; the
             # same #widths+1 bound applies (DESIGN.md §Fusion).  Chains
             # derive from the engine's *own* model config so prewarm
-            # matches dispatch even for smoke/reduced variants.
+            # matches dispatch even for smoke/reduced variants — and
+            # chains go first so a capture-mode trace below resolves
+            # its fused-kernel plans from the warm cache.
             self._chain_groups = bucketed_serving_fused_chain_groups(
                 arch_id, slots=self.cfg.slots,
                 chunk_widths=self.buckets.chunk_widths,
@@ -159,6 +167,21 @@ class ContinuousScheduler:
                 cfg=self.engine.model.cfg)
             self.prewarmed_chains = self.engine.prewarm_chains(
                 flatten_shape_groups(self._chain_groups))
+        if self.cfg.prewarm_source == "capture":
+            # per-bucket GEMM groups read off the engine model's own
+            # jaxpr-traced decode-step programs (chunked-prefill
+            # continuations at each width + the slot-batched decode):
+            # prewarmed plans match actual dispatch by construction
+            from ...capture.plan import captured_serving_plan_shape_groups
+            self._plan_groups = captured_serving_plan_shape_groups(
+                self.engine.model, slots=self.cfg.slots,
+                chunk_widths=self.buckets.chunk_widths,
+                cache_len=self.engine.cfg.cache_len)
+        else:
+            self._plan_groups = bucketed_serving_plan_shape_groups(
+                arch_id, slots=self.cfg.slots,
+                chunk_widths=self.buckets.chunk_widths,
+                cache_len=self.engine.cfg.cache_len)
         return self.engine.prewarm_shapes(
             flatten_shape_groups(self._plan_groups))
 

@@ -255,9 +255,9 @@ def test_cli_build_inspect_verify(tmp_path, capsys):
 def test_scenario_gemms_dedup_shape():
     rows = scenario_gemms(TINY, prefill_seqs=(64, 128),
                           decode_batches=(4,), cache_len=256)
-    assert len(rows) == 3 * 8                 # 8 gemm types per phase
-    store_entries = {}
-    for _, g, w in rows:
-        store_entries.setdefault(g.dims, 0)
-        store_entries[g.dims] += w
-    assert len(store_entries) < len(rows)     # lm_head dedups across seqs
+    # 8 gemm types per phase, but identical (Gemm, name) rows merge with
+    # summed weights: the seq-independent lm_head appears once for the
+    # whole prefill sweep
+    assert len(rows) == 3 * 8 - 1
+    lm = [(g, w) for t, g, w in rows if t == "lm_head" and g.Lx == 1]
+    assert len(lm) == 1 and lm[0][1] == 2     # weight 1 per prefill seq

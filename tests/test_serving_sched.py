@@ -262,10 +262,10 @@ def test_prewarm_dtype_mismatch_misses(setup, tmp_path, monkeypatch):
     """Plan identity includes the dtype-rescaled VMEM capacity: plans
     prewarmed under the wrong dtype_bytes miss at dispatch time; the
     engine's default (its compute dtype) hits."""
+    from repro.capture import plan as capture_plan
     from repro.core import tpu_mapping
-    from repro.planner import batch as planner_batch
     cfg, model, params, engine, oracle = setup
-    monkeypatch.setattr(planner_batch, "serving_plan_shapes",
+    monkeypatch.setattr(capture_plan, "serving_capture_shapes",
                         lambda *a, **k: [(64, 64, 64)])
     store = PlanStore(tmp_path)
     engine.plan_store = store
