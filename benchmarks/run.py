@@ -25,6 +25,10 @@ Suites:
   capture    jaxpr-capture front end: captured-vs-enumerated oracle +
              end-to-end planning of the moe/ssm/rwkv model programs ->
              BENCH_capture.json at the root
+  obs        observability: tracer overhead gate (<=5% on the serving
+             smoke config) + plan-fidelity replay (predicted energy vs
+             measured kernel time rank correlation) -> BENCH_obs.json
+             at the root
 """
 from __future__ import annotations
 
@@ -103,6 +107,9 @@ def main() -> None:
     if on("capture"):
         import bench_capture
         guarded("capture", lambda: bench_capture.run(smoke=False))
+    if on("obs"):
+        import bench_obs
+        guarded("obs", lambda: bench_obs.run(smoke=not args.full))
     if on("roofline"):
         try:
             import bench_roofline

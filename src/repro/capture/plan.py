@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from ..core.fusion import ChainSolveResult
 from ..core.hardware import AcceleratorSpec
 from ..core.solver import SOLVER_VERSION
+from ..obs.registry import get_registry
+from ..obs.tracing import span as _span
 from ..planner.batch import BatchPlanner, cached_solve_chain
 from ..planner.manifest import ModelMappingManifest
 from ..planner.store import PlanStore
@@ -89,24 +91,29 @@ def plan_program(program: PlanProgram, hw: AcceleratorSpec, *,
     objective is not "energy".
     """
     t0 = time.perf_counter()
-    planner = BatchPlanner(store, jobs=jobs, warm_start=warm_start)
-    entries = planner.plan_gemms(program.gemm_rows(), hw,
-                                 objective=objective,
-                                 spatial_mode=spatial_mode,
-                                 allowed_walk01=allowed_walk01)
-    manifest = ModelMappingManifest(
-        model=program.name, hw_name=hw.name, objective=objective,
-        prefill_seqs=(), decode_batches=(), cache_len=0,
-        entries=entries, solver_version=SOLVER_VERSION)
-    chain_rows: list[ChainPlanRow] = []
-    if solve_chains and objective == "energy":
-        for label, chain, weight in program.chain_rows():
-            res = cached_solve_chain(chain, hw, objective="energy",
+    get_registry().inc("capture.plans")
+    with _span("capture.plan_program", program=program.name,
+               hw=hw.name) as sp:
+        planner = BatchPlanner(store, jobs=jobs, warm_start=warm_start)
+        entries = planner.plan_gemms(program.gemm_rows(), hw,
+                                     objective=objective,
                                      spatial_mode=spatial_mode,
-                                     allowed_walk01=allowed_walk01,
-                                     store=store)
-            chain_rows.append(ChainPlanRow(label=label, weight=weight,
-                                           result=res))
+                                     allowed_walk01=allowed_walk01)
+        manifest = ModelMappingManifest(
+            model=program.name, hw_name=hw.name, objective=objective,
+            prefill_seqs=(), decode_batches=(), cache_len=0,
+            entries=entries, solver_version=SOLVER_VERSION)
+        chain_rows: list[ChainPlanRow] = []
+        if solve_chains and objective == "energy":
+            for label, chain, weight in program.chain_rows():
+                res = cached_solve_chain(chain, hw, objective="energy",
+                                         spatial_mode=spatial_mode,
+                                         allowed_walk01=allowed_walk01,
+                                         store=store)
+                chain_rows.append(ChainPlanRow(label=label, weight=weight,
+                                               result=res))
+        if sp:
+            sp.attrs.update(entries=len(entries), chains=len(chain_rows))
     return ProgramPlan(program=program, manifest=manifest,
                        chain_rows=chain_rows,
                        wall_time_s=time.perf_counter() - t0)

@@ -404,5 +404,13 @@ def capture(fn: Callable, *example_args, name: str = "program",
     """Trace ``fn`` on example args (arrays or ShapeDtypeStructs — the
     trace is shape-level, nothing is materialized) and harvest every
     contraction site and fusable chain it executes."""
-    closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
-    return harvest_jaxpr(closed, name=name, weight=weight)
+    from ..obs.registry import get_registry
+    from ..obs.tracing import span as _span
+    get_registry().inc("capture.traces")
+    with _span("capture.trace", program=name) as sp:
+        closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+        result = harvest_jaxpr(closed, name=name, weight=weight)
+        if sp:
+            sp.attrs.update(sites=len(result.sites),
+                            chains=len(result.chains))
+        return result

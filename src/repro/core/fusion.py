@@ -39,11 +39,15 @@ from __future__ import annotations
 import dataclasses
 import time
 
+from ..obs.registry import get_registry
+from ..obs.tracing import get_tracer
 from .certificate import (Certificate, check_constraints,
                           effective_spatial_mode, objective_value)
 from .geometry import Gemm, Mapping, divisors
 from .hardware import AcceleratorSpec
 from .solver import DEFAULT_ENGINE, SolveResult, solve
+
+_REG = get_registry()
 
 # Elementwise combines the fused kernel can realize between the links.
 ELEMENTWISE_OPS = ("silu_mul", "gelu_mul", "sqrelu_mul", "identity")
@@ -244,6 +248,35 @@ def solve_chain(chain: GemmChain, hw: AcceleratorSpec, *,
                 spatial_mode: str | None = None,
                 allowed_walk01: tuple[str, ...] | None = None,
                 engine: str | None = None) -> ChainSolveResult:
+    """Observability wrapper over the chain search: counts the call
+    (``solver.chain.calls``) and opens a ``solver.solve_chain`` span
+    enclosing the per-link ``solver.solve`` spans.  See
+    ``_solve_chain_impl`` for the algorithm documentation."""
+    _REG.inc("solver.chain.calls")
+    tr = get_tracer()
+    if tr is None:
+        return _solve_chain_impl(chain, hw, objective=objective,
+                                 spatial_mode=spatial_mode,
+                                 allowed_walk01=allowed_walk01,
+                                 engine=engine)
+    with tr.span("solver.solve_chain", chain=chain.name,
+                 producer=list(chain.producer.dims),
+                 consumer=list(chain.consumer.dims)) as sp:
+        res = _solve_chain_impl(chain, hw, objective=objective,
+                                spatial_mode=spatial_mode,
+                                allowed_walk01=allowed_walk01,
+                                engine=engine)
+        sp.attrs.update(fused=res.certificate.fused,
+                        feasible=res.certificate.feasible,
+                        n_solves=res.certificate.n_solves)
+        return res
+
+
+def _solve_chain_impl(chain: GemmChain, hw: AcceleratorSpec, *,
+                      objective: str = "energy",
+                      spatial_mode: str | None = None,
+                      allowed_walk01: tuple[str, ...] | None = None,
+                      engine: str | None = None) -> ChainSolveResult:
     """Exact fused-vs-unfused chain optimum with zero-gap certificate.
 
     Enumerates every strip height ``bm | M``; for each, solves producer

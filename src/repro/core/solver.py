@@ -54,10 +54,15 @@ import time
 
 import numpy as np
 
+from ..obs.registry import get_registry
+from ..obs.tracing import get_tracer
+from ..obs.tracing import span as _span
 from .certificate import Certificate, check_constraints
 from .energy import analytical_energy
 from .geometry import AXES, Gemm, Mapping, divisor_chains, mapping_space_size
 from .hardware import AcceleratorSpec, Ert
+
+_REG = get_registry()
 
 _EPS = 1e-12
 
@@ -72,20 +77,22 @@ ENGINES = ("vectorized", "reference")
 # Process default; overridable per call or via $GOMA_SOLVER_ENGINE.
 DEFAULT_ENGINE = os.environ.get("GOMA_SOLVER_ENGINE", "vectorized")
 
-# Process-level invocation counter: lets callers assert zero-solve
+# Process-level invocation counting lives in the observability registry
+# (``repro.obs.registry``) under ``solver.calls``; the two functions
+# below are back-compat shims so callers asserting zero-solve
 # properties (e.g. the serving scheduler's steady state runs entirely
-# from the plan database — tests/test_serving_sched.py).  ``solve_many``
-# routes through ``solve``, so one counter covers both entry points.
-_SOLVE_STATS = {"calls": 0}
+# from the plan database — tests/test_serving_sched.py) keep working
+# unchanged.  ``solve_many`` routes through ``solve``, so one counter
+# covers both entry points.
 
 
 def solver_stats() -> dict:
     """Snapshot of process-level solver counters ({"calls": n})."""
-    return dict(_SOLVE_STATS)
+    return {"calls": _REG.get("solver.calls")}
 
 
 def reset_solver_stats() -> None:
-    _SOLVE_STATS["calls"] = 0
+    _REG.reset("solver.calls")
 
 
 _BIG = 1 << 62          # "no threshold" sentinel (larger than any l1/l3)
@@ -196,17 +203,21 @@ def _axis_energy(axis: str, L0d: int, l1: np.ndarray, l2: np.ndarray,
 _AXIS_MEMO: "collections.OrderedDict[tuple, _AxisCands]" = \
     collections.OrderedDict()
 _AXIS_MEMO_CAP = 4096
-_AXIS_STATS = {"hits": 0, "misses": 0}
 
 
 def axis_cache_stats() -> dict:
-    """Observability for benchmarks/tests: {hits, misses, entries}."""
-    return dict(_AXIS_STATS, entries=len(_AXIS_MEMO))
+    """Observability for benchmarks/tests: {hits, misses, entries}.
+
+    Registry-backed shim (``solver.axis_cache.*``); the entry count is
+    a live property of the memo, not a counter."""
+    return {"hits": _REG.get("solver.axis_cache.hits"),
+            "misses": _REG.get("solver.axis_cache.misses"),
+            "entries": len(_AXIS_MEMO)}
 
 
 def clear_axis_cache() -> None:
     _AXIS_MEMO.clear()
-    _AXIS_STATS.update(hits=0, misses=0)
+    _REG.reset("solver.axis_cache.")
     _chain_arrays.cache_clear()
 
 
@@ -286,9 +297,9 @@ def _axis_cands(kind: str, L0d: int, ert: Ert, w01: bool, w12: bool,
     c = _AXIS_MEMO.get(key)
     if c is not None:
         _AXIS_MEMO.move_to_end(key)
-        _AXIS_STATS["hits"] += 1
+        _REG.inc("solver.axis_cache.hits")
         return c
-    _AXIS_STATS["misses"] += 1
+    _REG.inc("solver.axis_cache.misses")
     l1, l2, l3, s, s_vals, groups = _chain_arrays(L0d, fixed_s, fixed_l1)
     g = _axis_energy_kind(kind, L0d, l1, l2, l3, w01, w12, r1, r3, ert)
     by_s: dict[int, np.ndarray] = {}
@@ -669,6 +680,52 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
           require_res1: tuple[bool, bool, bool] | None = None) -> SolveResult:
     """Globally optimal mapping for (gemm, hw) with certificate.
 
+    Observability wrapper: counts the call (``solver.calls``) and opens
+    a ``solver.solve`` span when a tracer is installed, then delegates
+    to the branch-and-bound body.  Internal fallback re-solves (warm
+    start pruned everything, equality infeasible) recurse through this
+    wrapper, so each attempted search is one counted call with its own
+    span — matching the original counter semantics.
+    See ``_solve_impl`` for the full parameter documentation.
+    """
+    _REG.inc("solver.calls")
+    tr = get_tracer()
+    if tr is None:
+        return _solve_impl(gemm, hw, objective=objective,
+                           spatial_mode=spatial_mode,
+                           allowed_walk01=allowed_walk01,
+                           incumbent=incumbent, engine=engine,
+                           fixed_l1=fixed_l1, require_res1=require_res1)
+    with tr.span("solver.solve", dims=list(gemm.dims), hw=hw.name,
+                 objective=objective,
+                 engine=engine if engine is not None
+                 else DEFAULT_ENGINE) as sp:
+        res = _solve_impl(gemm, hw, objective=objective,
+                          spatial_mode=spatial_mode,
+                          allowed_walk01=allowed_walk01,
+                          incumbent=incumbent, engine=engine,
+                          fixed_l1=fixed_l1, require_res1=require_res1)
+        cert = res.certificate
+        sp.attrs.update(feasible=cert.feasible,
+                        solve_time_s=cert.solve_time_s,
+                        nodes=cert.nodes_explored)
+        if cert.feasible:
+            sp.attrs["objective_value"] = cert.objective
+        return res
+
+
+def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
+                objective: str = "energy",
+                spatial_mode: str | None = None,
+                allowed_walk01: tuple[str, ...] | None = None,
+                incumbent: float | None = None,
+                engine: str | None = None,
+                fixed_l1: tuple[int | None, int | None, int | None]
+                | None = None,
+                require_res1: tuple[bool, bool, bool] | None = None
+                ) -> SolveResult:
+    """Branch-and-bound search body behind ``solve``.
+
     objective: "energy" (paper default) or "edp".
     spatial_mode: "equality" (eq. 29), "le", or None = hw default with
     automatic fallback to "le" if equality is infeasible (recorded).
@@ -697,7 +754,6 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
     is charged against capacity.
     """
     t0 = time.perf_counter()
-    _SOLVE_STATS["calls"] += 1
     eng = engine if engine is not None else DEFAULT_ENGINE
     if eng not in ENGINES:
         raise ValueError(f"unknown engine {eng!r}; expected one of {ENGINES}")
@@ -872,18 +928,22 @@ def solve_many(requests, *, engine: str | None = None) -> list[SolveResult]:
     ``solve`` invocation (observable via ``solver_stats()``); every copy
     receives the same SolveResult object."""
     requests = list(requests)
-    flights: dict[tuple, SolveResult] = {}
-    out: list[SolveResult] = []
-    for r in requests:
-        key = _request_identity(r)
-        res = flights.get(key)
-        if res is None:
-            res = solve(r.gemm, r.hw, objective=r.objective,
-                        spatial_mode=r.spatial_mode,
-                        allowed_walk01=r.allowed_walk01,
-                        incumbent=r.incumbent, engine=engine,
-                        fixed_l1=getattr(r, "fixed_l1", None),
-                        require_res1=getattr(r, "require_res1", None))
-            flights[key] = res
-        out.append(res)
-    return out
+    _REG.inc("solver.solve_many.calls")
+    with _span("solver.solve_many", n=len(requests)) as sp:
+        flights: dict[tuple, SolveResult] = {}
+        out: list[SolveResult] = []
+        for r in requests:
+            key = _request_identity(r)
+            res = flights.get(key)
+            if res is None:
+                res = solve(r.gemm, r.hw, objective=r.objective,
+                            spatial_mode=r.spatial_mode,
+                            allowed_walk01=r.allowed_walk01,
+                            incumbent=r.incumbent, engine=engine,
+                            fixed_l1=getattr(r, "fixed_l1", None),
+                            require_res1=getattr(r, "require_res1", None))
+                flights[key] = res
+            out.append(res)
+        if sp:
+            sp.attrs["unique"] = len(flights)
+        return out

@@ -44,6 +44,10 @@ def main() -> None:
                     help="route gated-MLP blocks through the GOMA-chain-"
                          "planned fused Pallas kernel (token-identical; "
                          "fused plans prewarm through --plan-db)")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="--continuous: stream one JSON line per "
+                         "scheduler tick (registry counter snapshot + "
+                         "live metrics) to PATH")
     ap.add_argument("--prewarm-source", default="capture",
                     choices=("capture", "enumerated"),
                     help="plan prewarm shape source: 'capture' traces "
@@ -119,17 +123,40 @@ def _serve_continuous(args, cfg, model, params, store) -> None:
         prompt_mix=((max(args.prompt_len // 4, 1), args.prompt_len, 1.0),),
         max_new_tokens=args.new_tokens, vocab=cfg.vocab))
     clock = TraceClock()
+    on_tick = None
+    metrics_fh = None
+    if args.metrics_jsonl:
+        import json
+
+        from repro.obs.registry import get_registry
+
+        metrics_fh = open(args.metrics_jsonl, "w")
+        reg = get_registry()
+
+        def on_tick(s) -> None:
+            m = s.metrics
+            line = {"tick": m.steps, "t": clock.now(),
+                    "busy_slots": s.slots.n_busy,
+                    "queued": len(s.queue),
+                    "counters": reg.snapshot()}
+            metrics_fh.write(json.dumps(line, sort_keys=True) + "\n")
+
     sched = ContinuousScheduler(
         eng, SchedConfig(slots=args.batch, chunk_widths=widths,
                          temperature=args.temperature,
                          prewarm_source=args.prewarm_source),
         arch_id=args.arch if store is not None else None,
-        clock=clock.now)
+        clock=clock.now, on_tick=on_tick)
     if store is not None:
         print(f"plan prewarm: {sched.prewarmed_plans} GEMM tilings, "
               f"{sched.prewarmed_chains} fused chains  "
               f"store={store.stats()}")
-    results = replay(sched, trace, clock)
+    try:
+        results = replay(sched, trace, clock)
+    finally:
+        if metrics_fh is not None:
+            metrics_fh.close()
+            print(f"metrics stream: {args.metrics_jsonl}")
     summ = sched.metrics.summary()
     print(f"{cfg.name} continuous: {len(results)} requests, "
           f"{summ['total_generated_tokens']} tokens in "

@@ -1,0 +1,32 @@
+"""Unified observability: span tracer, counter registry, fidelity loop.
+
+Three small, dependency-light pieces:
+
+  * ``registry`` — process-wide named counters/gauges with scoped
+    (prefix) reset.  Absorbs the formerly ad-hoc solver call counter,
+    axis-cache hit/miss stats, and plan-store hit/miss/put counters;
+    the old ``solver_stats()`` / ``axis_cache_stats()`` /
+    ``PlanStore.stats()`` APIs remain as thin shims over it.
+  * ``tracing`` — nested spans with an injected clock (wall or the
+    scheduler's virtual trace clock), attributes, JSONL export.  A
+    module-level no-op fast path keeps instrumented call sites free
+    when no tracer is installed.
+  * ``fidelity`` (import ``repro.obs.fidelity`` explicitly; it pulls in
+    jax/kernels) — replays a manifest's plans through the real Pallas
+    kernels and records measured time next to predicted energy/bytes,
+    closing the predicted-vs-measured loop with a rank-correlation
+    gate.
+
+This ``__init__`` intentionally re-exports only the stdlib-only pieces
+so ``repro.core.solver`` (imported by numpy-only planner subprocesses)
+can depend on the registry without dragging in jax.
+"""
+from .registry import Registry, get_registry, inc, set_gauge
+from .tracing import (NULL_SPAN, Span, Tracer, get_tracer, set_tracer,
+                      span, trace_event)
+
+__all__ = [
+    "NULL_SPAN", "Registry", "Span", "Tracer", "get_registry",
+    "get_tracer", "inc", "set_gauge", "set_tracer", "span",
+    "trace_event",
+]

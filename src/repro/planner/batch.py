@@ -36,6 +36,8 @@ from ..core.hardware import AcceleratorSpec
 from ..core.solver import SOLVER_VERSION, SolveResult, solve
 from ..core.solver import solve_many as core_solve_many
 from ..core.workloads import LlmSpec, scenario_gemms
+from ..obs.registry import get_registry
+from ..obs.tracing import span as _obs_span
 from .manifest import ManifestEntry, ModelMappingManifest
 from .store import (FusedPlanEntry, PlanEntry, PlanKey, PlanStore,
                     chain_plan_key, plan_key)
@@ -224,7 +226,31 @@ class BatchPlanner:
                    spatial_mode: str | None = None,
                    allowed_walk01: tuple[str, ...] | None = None,
                    ) -> list[ManifestEntry]:
-        """Dedup -> hit/miss split -> parallel solve -> write-back."""
+        """Dedup -> hit/miss split -> parallel solve -> write-back.
+
+        Counted as ``planner.batches``; under a tracer the whole build
+        is one ``planner.plan_gemms`` span (store lookups and inline
+        solves nest inside it) whose attributes mirror the
+        ``BatchReport``."""
+        get_registry().inc("planner.batches")
+        with _obs_span("planner.plan_gemms", hw=hw.name,
+                       objective=objective) as sp:
+            entries = self._plan_gemms_impl(
+                gemms, hw, objective=objective, spatial_mode=spatial_mode,
+                allowed_walk01=allowed_walk01)
+            if sp:
+                rep = self.last_report
+                sp.attrs.update(rows=rep.total_gemms,
+                                unique=rep.unique_gemms, hits=rep.hits,
+                                solved=rep.solved,
+                                warm_started=rep.warm_started)
+        return entries
+
+    def _plan_gemms_impl(self, gemms: Iterable[tuple[str, Gemm, int]],
+                         hw: AcceleratorSpec, *, objective: str = "energy",
+                         spatial_mode: str | None = None,
+                         allowed_walk01: tuple[str, ...] | None = None,
+                         ) -> list[ManifestEntry]:
         t0 = time.perf_counter()
         rows = list(gemms)
         # aggregate weights of identical shapes, keep first-seen type name

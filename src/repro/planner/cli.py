@@ -236,6 +236,97 @@ def cmd_verify(args) -> int:
     return 1 if bad or fused_bad else 0
 
 
+def cmd_stats(args) -> int:
+    """Observability snapshot: process registry + store + fidelity."""
+    import json
+    import os
+
+    from ..obs.registry import get_registry
+
+    snap = get_registry().snapshot(args.prefix or "")
+    print(f"[registry] {len(snap)} metrics"
+          + (f" under {args.prefix!r}" if args.prefix else ""))
+    for name, value in snap.items():
+        print(f"  {name} = {value}")
+    root = args.store or os.environ.get(PLAN_DB_ENV, "").strip()
+    if root:
+        store = PlanStore(root)
+        print(f"[store] {json.dumps(store.stats())}")
+        fid_dir = store.root / "fidelity"
+        if fid_dir.is_dir():
+            from ..obs.fidelity import load_rows
+            for path in sorted(fid_dir.glob("*.jsonl")):
+                summary, rows = load_rows(path)
+                print(f"[fidelity] {path.name}: rows={len(rows)} "
+                      f"passes={summary.get('passes')} "
+                      f"families={summary.get('families')}")
+    return 0
+
+
+def cmd_trace(args) -> int:
+    """Run one traced capture->plan pass and summarize/export spans."""
+    from ..capture import capture_spec_prefill, plan_program
+    from ..obs.tracing import Tracer, set_tracer
+
+    store = _open_store(args) if args.store else None
+    hw = TEMPLATES[args.hw]
+    spec = MODELS[args.model]
+    tracer = Tracer()
+    prev = set_tracer(tracer)
+    try:
+        program = capture_spec_prefill(spec, args.seq)
+        plan = plan_program(program, hw, store=store, jobs=1)
+    finally:
+        set_tracer(prev)
+    print(plan.manifest.summary())
+    by_name: dict[str, list[float]] = {}
+    for sp in tracer.spans:
+        by_name.setdefault(sp.name, []).append(sp.duration)
+    print(f"[trace] {len(tracer.spans)} spans")
+    for name, durs in sorted(by_name.items(),
+                             key=lambda kv: -sum(kv[1])):
+        print(f"  {name:28s} n={len(durs):4d} "
+              f"total={sum(durs) * 1e3:9.2f}ms "
+              f"max={max(durs) * 1e3:8.2f}ms")
+    if args.out:
+        tracer.to_jsonl(args.out)
+        print(f"[trace] spans written to {args.out}")
+    return 0
+
+
+def cmd_fidelity(args) -> int:
+    """Replay a manifest through the Pallas kernels; gate on rank corr."""
+    from ..core import tpu_mapping
+    from ..obs.fidelity import record_rows, replay_manifest
+
+    manifest = ModelMappingManifest.load(args.manifest)
+    store = _open_store(args) if args.store else None
+    if store is not None:
+        tpu_mapping.set_plan_store(store)
+
+    def progress(i, n, row):
+        print(f"  [{i}/{n}] {row.gemm_type:16s} {str(row.dims):>22s} "
+              f"pred={row.predicted_energy:.3e}pJ "
+              f"t={row.measured_time_s * 1e3:.3f}ms")
+
+    rep = replay_manifest(
+        manifest, repeats=args.repeats, warmup=args.warmup,
+        interpret=True if args.interpret else None,
+        max_entries=args.max_entries, gate=args.gate,
+        estimator=args.estimator,
+        progress=progress if args.verbose else None)
+    print(f"[fidelity] {rep.summary()}")
+    if store is not None:
+        path = record_rows(rep, store.root, args.name or manifest.model)
+        print(f"[fidelity] rows recorded at {path}")
+    if args.out:
+        import json
+        with open(args.out, "w") as fh:
+            json.dump(rep.to_json(), fh, indent=1, sort_keys=True)
+        print(f"[fidelity] report written to {args.out}")
+    return 0 if rep.passes() else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.plan",
@@ -303,6 +394,47 @@ def main(argv=None) -> int:
                                       " (single-GEMM and fused chains)")
     _add_store_arg(v)
     v.set_defaults(fn=cmd_verify)
+
+    s = sub.add_parser("stats", help="observability snapshot: registry "
+                                     "counters, store traffic, fidelity "
+                                     "reports")
+    s.add_argument("--prefix", default="",
+                   help="only registry metrics under this dotted prefix")
+    _add_store_arg(s)
+    s.set_defaults(fn=cmd_stats)
+
+    t = sub.add_parser("trace", help="run one traced capture->plan pass "
+                                     "and summarize / export its spans")
+    t.add_argument("--model", required=True, choices=sorted(MODELS),
+                   help="paper LlmSpec model (reference prefill program)")
+    t.add_argument("--seq", type=int, default=256)
+    t.add_argument("--hw", default="eyeriss-like", choices=sorted(TEMPLATES))
+    t.add_argument("--out", default=None, help="span JSONL output path")
+    _add_store_arg(t)
+    t.set_defaults(fn=cmd_trace)
+
+    f = sub.add_parser("fidelity", help="replay a manifest's plans "
+                                        "through the Pallas kernels and "
+                                        "gate on predicted-vs-measured "
+                                        "rank correlation")
+    f.add_argument("--manifest", required=True,
+                   help="ModelMappingManifest JSON path")
+    f.add_argument("--repeats", type=int, default=5)
+    f.add_argument("--warmup", type=int, default=2)
+    f.add_argument("--estimator", default="median",
+                   choices=("median", "min"),
+                   help="per-plan time estimator (min: stable for "
+                        "tens-of-µs kernels under dispatch noise)")
+    f.add_argument("--interpret", action="store_true",
+                   help="force the Pallas interpreter path")
+    f.add_argument("--max-entries", type=int, default=None)
+    f.add_argument("--gate", type=float, default=0.9)
+    f.add_argument("--name", default=None,
+                   help="fidelity record name (default: manifest model)")
+    f.add_argument("--out", default=None, help="full report JSON path")
+    f.add_argument("--verbose", "-v", action="store_true")
+    _add_store_arg(f)
+    f.set_defaults(fn=cmd_fidelity)
 
     args = ap.parse_args(argv)
     return args.fn(args)

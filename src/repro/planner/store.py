@@ -32,6 +32,10 @@ from ..core.fusion import ChainCertificate, GemmChain
 from ..core.geometry import Gemm, Mapping
 from ..core.hardware import AcceleratorSpec, Ert
 from ..core.solver import SOLVER_VERSION
+from ..obs.registry import get_registry
+from ..obs.tracing import span as _span
+
+_REG = get_registry()
 
 SCHEMA_VERSION = 1
 # Fused (chain) entries carry their own schema: the chain objective and
@@ -439,11 +443,16 @@ class PlanStore:
     # -- core interface ----------------------------------------------------
     def get(self, key: PlanKey | str) -> PlanEntry | None:
         digest = key if isinstance(key, str) else key.digest
-        entry = self._load(digest)
-        if entry is None:
-            self.misses += 1
-        else:
-            self.hits += 1
+        with _span("store.get", digest=digest[:12]) as sp:
+            entry = self._load(digest)
+            if entry is None:
+                self.misses += 1
+                _REG.inc("plan_store.misses")
+            else:
+                self.hits += 1
+                _REG.inc("plan_store.hits")
+            if sp:
+                sp.attrs["hit"] = entry is not None
         return entry
 
     def contains(self, key: PlanKey | str) -> bool:
@@ -469,6 +478,7 @@ class PlanStore:
             if entry.digest not in fam:
                 fam.append(entry.digest)
         self.puts += 1
+        _REG.inc("plan_store.puts")
 
     # -- fused (chain) entries ---------------------------------------------
     def _fused_path(self, digest: str) -> pathlib.Path:
@@ -476,21 +486,26 @@ class PlanStore:
 
     def get_fused(self, key: "ChainKey | str") -> FusedPlanEntry | None:
         digest = key if isinstance(key, str) else key.digest
-        entry = self._fused_mem.get(digest)
-        if entry is None:
-            path = self._fused_path(digest)
-            if path.exists():
-                try:
-                    entry = FusedPlanEntry.from_json(
-                        json.loads(path.read_text()))
-                except (json.JSONDecodeError, KeyError):
-                    entry = None
-                if entry is not None:
-                    self._fused_mem[digest] = entry
-        if entry is None:
-            self.misses += 1
-        else:
-            self.hits += 1
+        with _span("store.get_fused", digest=digest[:12]) as sp:
+            entry = self._fused_mem.get(digest)
+            if entry is None:
+                path = self._fused_path(digest)
+                if path.exists():
+                    try:
+                        entry = FusedPlanEntry.from_json(
+                            json.loads(path.read_text()))
+                    except (json.JSONDecodeError, KeyError):
+                        entry = None
+                    if entry is not None:
+                        self._fused_mem[digest] = entry
+            if entry is None:
+                self.misses += 1
+                _REG.inc("plan_store.misses")
+            else:
+                self.hits += 1
+                _REG.inc("plan_store.hits")
+            if sp:
+                sp.attrs["hit"] = entry is not None
         return entry
 
     def put_fused(self, entry: FusedPlanEntry) -> None:
@@ -508,6 +523,7 @@ class PlanStore:
             raise
         self._fused_mem[entry.digest] = entry
         self.puts += 1
+        _REG.inc("plan_store.puts")
 
     def fused_entries(self) -> Iterator[FusedPlanEntry]:
         for path in sorted((self.root / "fused").glob("*/*.json")):

@@ -27,6 +27,10 @@ class ServingMetrics:
     decode_steps: int = 0           # ticks that ran a decode batch
     prefill_chunks: int = 0
     padded_prefill_tokens: int = 0  # wasted positions from bucket padding
+    padded_decode_rows: int = 0     # inactive rows ridden through decode
+    #                                 batches (slot-pool padding waste,
+    #                                 the decode-side analogue of
+    #                                 padded_prefill_tokens)
     # per-tick slot occupancy samples (active slots / total slots)
     occupancy_samples: list[float] = dataclasses.field(default_factory=list)
     # decode-tick batch efficiency (active rows / slot count)
@@ -37,11 +41,13 @@ class ServingMetrics:
         self.results.append(res)
 
     def record_tick(self, *, active: int, slots: int, decoded: bool,
-                    chunks: int, padded_tokens: int) -> None:
+                    chunks: int, padded_tokens: int,
+                    padded_rows: int = 0) -> None:
         self.steps += 1
         self.decode_steps += decoded
         self.prefill_chunks += chunks
         self.padded_prefill_tokens += padded_tokens
+        self.padded_decode_rows += padded_rows
         self.occupancy_samples.append(active / slots if slots else 0.0)
 
     # ------------------------------------------------------------- summary
@@ -59,9 +65,14 @@ class ServingMetrics:
 
     def summary(self) -> dict:
         ttft = [r.ttft_s for r in self.results]
-        # per-token decode latency: generation span / tokens after the first
+        # per-token decode latency: generation span / tokens after the
+        # first.  When *every* request generated <=1 token the sample
+        # list is empty and percentiles would be NaN — report 0.0 so the
+        # summary stays JSON-round-trippable and threshold-comparable.
         tpot = [(r.finish_s - r.first_token_s) / (r.n_generated - 1)
                 for r in self.results if r.n_generated > 1]
+        tpot_p50 = _pct(tpot, 50) if tpot else 0.0
+        tpot_p95 = _pct(tpot, 95) if tpot else 0.0
         return {
             "requests": len(self.results),
             "total_generated_tokens": self.total_generated,
@@ -69,12 +80,13 @@ class ServingMetrics:
             "tokens_per_s": round(self.tokens_per_s, 3),
             "ttft_p50_s": round(_pct(ttft, 50), 6),
             "ttft_p95_s": round(_pct(ttft, 95), 6),
-            "tpot_p50_s": round(_pct(tpot, 50), 6),
-            "tpot_p95_s": round(_pct(tpot, 95), 6),
+            "tpot_p50_s": round(tpot_p50, 6),
+            "tpot_p95_s": round(tpot_p95, 6),
             "steps": self.steps,
             "decode_steps": self.decode_steps,
             "prefill_chunks": self.prefill_chunks,
             "padded_prefill_tokens": self.padded_prefill_tokens,
+            "padded_decode_rows": self.padded_decode_rows,
             "mean_slot_occupancy": round(
                 float(np.mean(self.occupancy_samples))
                 if self.occupancy_samples else 0.0, 4),

@@ -39,11 +39,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs.registry import get_registry
+from ...obs.tracing import get_tracer
+from ...obs.tracing import span as _span
 from ..engine import Engine, gumbel_argmax
 from .buckets import BucketSpec, Chunk
 from .metrics import ServingMetrics
 from .requests import Request, RequestResult, RequestState
 from .slots import Slot, SlotManager
+
+_REG = get_registry()
 
 # Families whose cache is a pure per-layer KV tensor with batch on axis 1
 # (slot grafting + slot-indexed writes assume that layout).  Recurrent
@@ -88,6 +93,8 @@ class ContinuousScheduler:
                  arch_id: str | None = None,
                  on_token: Callable[[Request, int], None] | None = None,
                  on_finish: Callable[[RequestResult], None] | None = None,
+                 on_tick: Callable[["ContinuousScheduler"], None]
+                 | None = None,
                  clock: Callable[[], float] | None = None):
         fam = engine.model.cfg.family
         if fam not in SUPPORTED_FAMILIES:
@@ -115,6 +122,10 @@ class ContinuousScheduler:
         self.results: list[RequestResult] = []
         self.on_token = on_token
         self.on_finish = on_finish
+        self.on_tick = on_tick
+        # per-request lifecycle spans (admit -> first token -> finish),
+        # keyed by req_id; detached because they straddle many ticks
+        self._req_spans: dict[int, object] = {}
         if clock is None:
             t0 = time.perf_counter()
             clock = lambda: time.perf_counter() - t0  # noqa: E731
@@ -235,11 +246,24 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------ stepping
     def step(self) -> None:
-        """One scheduler tick: admit -> prefill chunk(s) -> decode."""
+        """One scheduler tick: admit -> prefill chunk(s) -> decode.
+
+        Observability: the tick is one ``sched.tick`` span with
+        ``sched.prefill_chunk`` / ``sched.decode_batch`` children;
+        admission opens a detached per-request ``sched.request`` span
+        that ``_emit`` closes at finish.  Registry counters mirror the
+        ``ServingMetrics`` tick accounting under ``sched.*``."""
+        with _span("sched.tick", tick=self.metrics.steps) as tick_sp:
+            self._step_inner(tick_sp)
+        if self.on_tick is not None:
+            self.on_tick(self)
+
+    def _step_inner(self, tick_sp) -> None:
         if not self.metrics.steps:
             self.metrics.started_s = self.clock()
         chunks_run = 0
         padded_tokens = 0
+        _REG.inc("sched.ticks")
 
         # 1. admission: start prefilling the oldest queued request
         if self._prefill is None and self.queue and self.slots.n_free:
@@ -256,6 +280,13 @@ class ContinuousScheduler:
                 chunks=collections.deque(
                     self.buckets.plan_chunks(req.prompt_len)),
                 padded=buf)
+            _REG.inc("sched.admitted")
+            tr = get_tracer()
+            if tr is not None:
+                self._req_spans[req.req_id] = tr.start(
+                    "sched.request", detached=True, req_id=req.req_id,
+                    prompt_len=req.prompt_len,
+                    max_new_tokens=req.max_new_tokens)
 
         # 2. chunked prefill of the in-flight request
         budget = max(1, self.cfg.prefill_chunks_per_step)
@@ -263,10 +294,15 @@ class ContinuousScheduler:
             chunk: Chunk = self._prefill.chunks.popleft()
             toks = self._prefill.padded[:, chunk.start:chunk.start
                                         + chunk.width]
-            logits, self._prefill.cache = self.engine.prefill_chunk(
-                self._prefill.cache, toks, chunk.start)
+            with _span("sched.prefill_chunk", width=chunk.width,
+                       start=chunk.start, real=chunk.n_real):
+                logits, self._prefill.cache = self.engine.prefill_chunk(
+                    self._prefill.cache, toks, chunk.start)
             chunks_run += 1
             padded_tokens += chunk.width - chunk.n_real
+            _REG.inc("sched.prefill_chunks")
+            _REG.inc("sched.padded_prefill_tokens",
+                     chunk.width - chunk.n_real)
             budget -= 1
             if not self._prefill.chunks:
                 self._activate(self._prefill, logits, chunk)
@@ -279,11 +315,13 @@ class ContinuousScheduler:
         decoded = False
         if active:
             decoded = True
-            tokens = jnp.asarray(self._cur[:, None])
-            positions = jnp.asarray(self._pos)
-            logits, self.slot_cache = self.engine.decode_slots(
-                self.slot_cache, tokens, positions)
-            nxt = self._sample_rows(logits[:, -1], active)
+            with _span("sched.decode_batch", rows=len(active),
+                       slots=len(self.slots)):
+                tokens = jnp.asarray(self._cur[:, None])
+                positions = jnp.asarray(self._pos)
+                logits, self.slot_cache = self.engine.decode_slots(
+                    self.slot_cache, tokens, positions)
+                nxt = self._sample_rows(logits[:, -1], active)
             now = self.clock()
             for slot in active:
                 tok = int(nxt[slot.idx])
@@ -291,11 +329,19 @@ class ContinuousScheduler:
                 self._cur[slot.idx] = tok
                 slot.next_token = tok
                 self._emit(slot, tok, now)
+            _REG.inc("sched.decode_steps")
+            _REG.inc("sched.padded_decode_rows",
+                     len(self.slots) - len(active))
             self._resolve_plans("decode")
 
+        padded_rows = len(self.slots) - len(active) if decoded else 0
+        if tick_sp:
+            tick_sp.attrs.update(active=len(active), chunks=chunks_run,
+                                 decoded=decoded)
         self.metrics.record_tick(
             active=len(active), slots=len(self.slots), decoded=decoded,
-            chunks=chunks_run, padded_tokens=padded_tokens)
+            chunks=chunks_run, padded_tokens=padded_tokens,
+            padded_rows=padded_rows)
         self.metrics.finished_s = self.clock()
 
     def _activate(self, pf: _Prefill, logits, last_chunk: Chunk) -> None:
@@ -315,10 +361,17 @@ class ContinuousScheduler:
     def _emit(self, slot: Slot, tok: int, now: float,
               first: bool = False) -> None:
         req = slot.req
+        tr = get_tracer()
         if first:
             slot.first_token_s = now
+            if tr is not None:
+                rsp = self._req_spans.get(req.req_id)
+                if rsp is not None:
+                    tr.event("sched.first_token", parent=rsp,
+                             req_id=req.req_id)
         slot.emitted += 1
         slot.tokens.append(tok)
+        _REG.inc("sched.tokens")
         if self.on_token is not None:
             self.on_token(req, tok)
         stopped = slot.stop_token is not None and tok == slot.stop_token
@@ -330,6 +383,11 @@ class ContinuousScheduler:
                 first_token_s=slot.first_token_s, finish_s=now)
             self.results.append(res)
             self.metrics.record_result(res)
+            _REG.inc("sched.finished")
+            rsp = self._req_spans.pop(req.req_id, None)
+            if tr is not None and rsp is not None:
+                tr.end(rsp, n_generated=res.n_generated,
+                       finish_reason=res.finish_reason)
             if self.on_finish is not None:
                 self.on_finish(res)
             self.slots.release(slot)

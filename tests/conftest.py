@@ -1,5 +1,29 @@
 import pathlib
 import sys
 
+import pytest
+
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
+
+
+@pytest.fixture(autouse=True)
+def _reset_observability():
+    """Zero every global counter between tests so stats-asserting tests
+    (solver calls, axis-cache hits, store traffic) never depend on
+    execution order.
+
+    Only *counters* are reset: the axis-candidate memo contents and the
+    plan caches are left warm (clearing them would serialize the suite
+    behind recomputation; tests that need a cold cache call
+    ``clear_axis_cache()`` themselves).  The installed tracer, if any,
+    is also cleared — a test that installs one must not leak spans into
+    its neighbors."""
+    from repro.obs.registry import get_registry
+    from repro.obs.tracing import set_tracer
+
+    get_registry().reset()
+    set_tracer(None)
+    yield
+    get_registry().reset()
+    set_tracer(None)
