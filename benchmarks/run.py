@@ -29,6 +29,10 @@ Suites:
              smoke config) + plan-fidelity replay (predicted energy vs
              measured kernel time rank correlation) -> BENCH_obs.json
              at the root
+  resilience chaos replay under a seeded fault schedule (store faults +
+             NaN row + stalled tick): zero crashes, served requests
+             token-identical, throughput >= 0.9x fault-free ->
+             BENCH_resilience.json at the root
 """
 from __future__ import annotations
 
@@ -110,6 +114,9 @@ def main() -> None:
     if on("obs"):
         import bench_obs
         guarded("obs", lambda: bench_obs.run(smoke=not args.full))
+    if on("resilience"):
+        import bench_resilience
+        guarded("resilience", lambda: bench_resilience.run())
     if on("roofline"):
         try:
             import bench_roofline

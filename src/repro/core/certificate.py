@@ -62,6 +62,11 @@ class Certificate:
     # engine or the "reference" DFS); pre-engine artifacts default to
     # "reference", which is what they were solved with
     engine: str = "reference"
+    # True when solve() hit its time budget (anytime mode): the mapping is
+    # the best *incumbent* and lower_bound is a proven global bound — the
+    # recorded gap upper-bounds the distance to the unknown optimum.
+    # Zero-gap certificates keep the default False.
+    bounded: bool = False
 
     @property
     def gap(self) -> float:
@@ -76,7 +81,8 @@ class Certificate:
                 f"nodes={self.nodes_explored} pruned={self.nodes_pruned} "
                 f"combos_skipped={self.combos_skipped} "
                 f"space={self.space_size:.3g} t={self.solve_time_s:.3f}s "
-                f"mode={self.spatial_mode} engine={self.engine}")
+                f"mode={self.spatial_mode} engine={self.engine}"
+                + (" BOUNDED" if self.bounded else ""))
 
 
 def effective_spatial_mode(hw: AcceleratorSpec,
@@ -130,6 +136,12 @@ def verify(cert: Certificate, hw: AcceleratorSpec,
         return False
     obj = objective_value(cert.gemm, m, hw, cert.objective_kind)
     ok_obj = abs(obj - cert.objective) <= rel_tol * max(1.0, abs(obj))
+    if cert.bounded:
+        # anytime incumbent: the gap is a *claim* (LB <= optimum <= UB),
+        # not a contradiction — require only internal consistency
+        return (ok_obj and cert.gap >= -rel_tol * max(1.0, abs(obj))
+                and cert.upper_bound <= cert.objective
+                + rel_tol * max(1.0, abs(obj)))
     return ok_obj and cert.gap <= rel_tol * max(1.0, abs(cert.objective))
 
 

@@ -54,6 +54,7 @@ import time
 
 import numpy as np
 
+from ..faults import inject
 from ..obs.registry import get_registry
 from ..obs.tracing import get_tracer
 from ..obs.tracing import span as _span
@@ -361,6 +362,23 @@ class _SearchState:
     nodes: int = 0
     pruned: int = 0
     combos_skipped: int = 0
+    # anytime mode: wall-clock deadline (perf_counter) after which the
+    # search stops improving the incumbent; never honored before the
+    # first incumbent exists, so a feasible instance always returns a
+    # feasible (if bounded) result
+    deadline: float | None = None
+    expired: bool = False
+
+
+def _check_budget(st: _SearchState) -> bool:
+    """True once the anytime deadline has passed (sticky).  Cheap when
+    no deadline is set; with one, costs a perf_counter() read."""
+    if st.expired:
+        return True
+    if (st.deadline is not None and st.best_state is not None
+            and time.perf_counter() >= st.deadline):
+        st.expired = True
+    return st.expired
 
 
 # ---------------------------------------------------------------------------
@@ -378,6 +396,8 @@ def _dfs_triple(st: _SearchState, combo, cx, cy, cz, sx: int, sy: int,
     min_gz = cz.min_g_by_s[sz]
     zi = cz.by_s[sz]
     for ix in cx.by_s[sx]:
+        if _check_budget(st):
+            return
         gx = cx.g[ix] + macc + leak_term
         if (gx + min_gy + min_gz) * scale >= st.best - _EPS:
             break
@@ -447,6 +467,8 @@ def _triples_reference(st: _SearchState, combo, cx, cy, cz,
                 if lb_triple >= st.best - _EPS:
                     st.pruned += 1
                     continue
+                if _check_budget(st):
+                    return
                 _dfs_triple(st, combo, cx, cy, cz, sx, sy, sz, hw, macc,
                             leak_term, scale)
 
@@ -506,6 +528,8 @@ def _frontier_join(st: _SearchState, combo, cx, cy, cz, sx: int, sy: int,
     xpos = 0
     nx = X.size
     while xpos < nx:
+        if _check_budget(st):
+            return
         # dynamic x prune (the DFS's break): ascending bound => prefix
         keep = int(np.searchsorted(bound_x[xpos:], st.best - _EPS,
                                    side="left"))
@@ -646,6 +670,8 @@ def _triples_vectorized(st: _SearchState, combo, cx, cy, cz,
             if l >= st.best - _EPS:            # incumbent moved since
                 st.pruned += 1
                 continue
+            if _check_budget(st):
+                return
             _frontier_join(st, combo, cx, cy, cz, int(grid.sx[i]),
                            int(grid.sy[j]), int(grid.szv[i, j]), hw, macc,
                            grid.leak_term, grid.scale_g)
@@ -658,6 +684,8 @@ def _triples_vectorized(st: _SearchState, combo, cx, cy, cz,
             if float(lb[p]) >= st.best - _EPS:  # incumbent moved since
                 st.pruned += 1
                 continue
+            if _check_budget(st):
+                return
             s_prod = int(grid.sprods[p])
             _frontier_join(st, combo, cx, cy, cz, int(grid.vsx[p]),
                            int(grid.vsy[p]), int(grid.vsz[p]), hw, macc,
@@ -677,7 +705,8 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
           incumbent: float | None = None,
           engine: str | None = None,
           fixed_l1: tuple[int | None, int | None, int | None] | None = None,
-          require_res1: tuple[bool, bool, bool] | None = None) -> SolveResult:
+          require_res1: tuple[bool, bool, bool] | None = None,
+          budget_s: float | None = None) -> SolveResult:
     """Globally optimal mapping for (gemm, hw) with certificate.
 
     Observability wrapper: counts the call (``solver.calls``) and opens
@@ -691,11 +720,15 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
     _REG.inc("solver.calls")
     tr = get_tracer()
     if tr is None:
-        return _solve_impl(gemm, hw, objective=objective,
-                           spatial_mode=spatial_mode,
-                           allowed_walk01=allowed_walk01,
-                           incumbent=incumbent, engine=engine,
-                           fixed_l1=fixed_l1, require_res1=require_res1)
+        res = _solve_impl(gemm, hw, objective=objective,
+                          spatial_mode=spatial_mode,
+                          allowed_walk01=allowed_walk01,
+                          incumbent=incumbent, engine=engine,
+                          fixed_l1=fixed_l1, require_res1=require_res1,
+                          budget_s=budget_s)
+        if res.certificate.bounded:
+            _REG.inc("degraded.solver.bounded")
+        return res
     with tr.span("solver.solve", dims=list(gemm.dims), hw=hw.name,
                  objective=objective,
                  engine=engine if engine is not None
@@ -704,13 +737,17 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
                           spatial_mode=spatial_mode,
                           allowed_walk01=allowed_walk01,
                           incumbent=incumbent, engine=engine,
-                          fixed_l1=fixed_l1, require_res1=require_res1)
+                          fixed_l1=fixed_l1, require_res1=require_res1,
+                          budget_s=budget_s)
         cert = res.certificate
         sp.attrs.update(feasible=cert.feasible,
                         solve_time_s=cert.solve_time_s,
                         nodes=cert.nodes_explored)
         if cert.feasible:
             sp.attrs["objective_value"] = cert.objective
+        if cert.bounded:
+            _REG.inc("degraded.solver.bounded")
+            sp.attrs.update(bounded=True, gap=cert.gap)
         return res
 
 
@@ -722,8 +759,8 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
                 engine: str | None = None,
                 fixed_l1: tuple[int | None, int | None, int | None]
                 | None = None,
-                require_res1: tuple[bool, bool, bool] | None = None
-                ) -> SolveResult:
+                require_res1: tuple[bool, bool, bool] | None = None,
+                budget_s: float | None = None) -> SolveResult:
     """Branch-and-bound search body behind ``solve``.
 
     objective: "energy" (paper default) or "edp".
@@ -752,6 +789,17 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
     that normal axis must be SRAM-resident).  Restricts the res1 combo
     set; used by the chain solver so the fused intermediate's footprint
     is charged against capacity.
+    budget_s: anytime mode — a wall-clock budget after which the search
+    stops and returns the best *incumbent* with ``certificate.bounded``
+    set and a sound proven gap.  Soundness of the recorded lower bound:
+    combos are visited in ascending order of their per-axis bound
+    (``combo_lb``), every fully-searched combo was explored or pruned
+    against an incumbent >= the final UB, and the in-progress combo plus
+    every remaining one is lower-bounded by the current ``combo_lb``
+    (times the best-case objective scale) — so
+    LB = min(UB, combo_lb * max_scale) bounds the true optimum from
+    below.  The deadline is never honored before the first incumbent
+    exists: a feasible instance always returns a feasible result.
     """
     t0 = time.perf_counter()
     eng = engine if engine is not None else DEFAULT_ENGINE
@@ -808,12 +856,23 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
     else:
         incumbent = None
         best = np.inf
-    st = _SearchState(best=best)
+    deadline = None
+    if budget_s is not None:
+        deadline = t0 + float(budget_s)
+    if inject("solver.over_budget") is not None:
+        # forced anytime expiry: deadline already in the past, so the
+        # search stops as soon as the first incumbent exists
+        deadline = t0
+    st = _SearchState(best=best, deadline=deadline)
     vectorized = eng == "vectorized"
     grid: _TripleGrid | None = None
+    # lower bound over the in-progress combo and (by the ascending combo
+    # order) everything after it, valid whenever the budget expires
+    expiry_lb = np.inf
 
     # Enumerate spatial triples lazily per combo (s-value sets are variant
-    # independent, but candidate g's are not).
+    # independent, but candidate g's are not).  The sort is ascending in
+    # the per-combo bound, which the anytime lower bound relies on.
     for combo in sorted(
             combos,
             key=lambda c: sum(
@@ -832,6 +891,9 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
         if combo_lb * max_scale >= st.best - _EPS:
             st.combos_skipped += 1
             continue
+        expiry_lb = combo_lb * max_scale
+        if _check_budget(st):
+            break
         if vectorized:
             if grid is None:
                 grid = _make_grid(cx, cy, cz, spatial_mode, npe,
@@ -841,6 +903,8 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
         else:
             _triples_reference(st, combo, cx, cy, cz, spatial_mode, hw,
                                macc, leak_cycle, objective)
+        if st.expired:
+            break
 
     elapsed = time.perf_counter() - t0
     space = mapping_space_size(gemm, search_bypass=hw.allow_bypass)
@@ -850,15 +914,18 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
             # The warm-start UB pruned everything: either the instance is
             # infeasible or its optimum exceeds the neighbor's objective.
             # Re-solve cold — exactness never depends on the incumbent.
+            # Anytime note: the fallback gets a *fresh* budget window.
             return solve(gemm, hw, objective=objective,
                          spatial_mode=requested_mode,
                          allowed_walk01=allowed_walk01, engine=eng,
-                         fixed_l1=fixed_l1, require_res1=require_res1)
+                         fixed_l1=fixed_l1, require_res1=require_res1,
+                         budget_s=budget_s)
         if spatial_mode == "equality" and requested_mode is None:
             # eq. 29 infeasible for this (gemm, hw): documented fallback
             return solve(gemm, hw, objective="edp", spatial_mode="le",
                          allowed_walk01=allowed_walk01, engine=eng,
-                         fixed_l1=fixed_l1, require_res1=require_res1)
+                         fixed_l1=fixed_l1, require_res1=require_res1,
+                         budget_s=budget_s)
         cert = Certificate(gemm=gemm, hw_name=hw.name, mapping=None,
                            objective=np.inf, upper_bound=np.inf,
                            lower_bound=np.inf, nodes_explored=st.nodes,
@@ -877,15 +944,22 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
         L3=(int(cx.l3[ix]), int(cy.l3[iy]), int(cz.l3[iz])),
         alpha01=a01, alpha12=a12, res1=r1, res3=r3)
     bd = analytical_energy(gemm, m, hw)
+    # Full search: UB == LB (zero gap).  Budget expiry: LB is the bound
+    # covering the in-progress combo and all remaining (ascending) ones,
+    # clamped by the incumbent — the recorded gap bounds the true gap.
+    lower = float(st.best)
+    if st.expired:
+        lower = float(min(lower, expiry_lb))
     cert = Certificate(gemm=gemm, hw_name=hw.name, mapping=m,
                        objective=float(st.best), upper_bound=float(st.best),
-                       lower_bound=float(st.best), nodes_explored=st.nodes,
+                       lower_bound=lower, nodes_explored=st.nodes,
                        nodes_pruned=st.pruned,
                        combos_skipped=st.combos_skipped,
                        space_size=space, solve_time_s=elapsed,
                        spatial_mode=spatial_mode, feasible=True,
                        objective_kind=objective,
-                       warm_started=incumbent is not None, engine=eng)
+                       warm_started=incumbent is not None, engine=eng,
+                       bounded=st.expired)
     assert check_constraints(gemm, m, hw, spatial_mode=(
         "equality" if spatial_mode == "fixed" else spatial_mode))
     return SolveResult(mapping=m, certificate=cert, breakdown=bd)
@@ -902,6 +976,7 @@ class SolveRequest:
     spatial_mode: str | None = None
     allowed_walk01: tuple[str, ...] | None = None
     incumbent: float | None = None
+    budget_s: float | None = None
 
 
 def _request_identity(r) -> tuple:
@@ -912,7 +987,8 @@ def _request_identity(r) -> tuple:
     semantics, which hash extents only)."""
     return (r.gemm.dims, r.hw, r.objective, r.spatial_mode,
             r.allowed_walk01, r.incumbent,
-            getattr(r, "fixed_l1", None), getattr(r, "require_res1", None))
+            getattr(r, "fixed_l1", None), getattr(r, "require_res1", None),
+            getattr(r, "budget_s", None))
 
 
 def solve_many(requests, *, engine: str | None = None) -> list[SolveResult]:
@@ -941,7 +1017,8 @@ def solve_many(requests, *, engine: str | None = None) -> list[SolveResult]:
                             allowed_walk01=r.allowed_walk01,
                             incumbent=r.incumbent, engine=engine,
                             fixed_l1=getattr(r, "fixed_l1", None),
-                            require_res1=getattr(r, "require_res1", None))
+                            require_res1=getattr(r, "require_res1", None),
+                            budget_s=getattr(r, "budget_s", None))
                 flights[key] = res
             out.append(res)
         if sp:

@@ -54,7 +54,28 @@ def main() -> None:
                          "this deployment's own prefill/decode programs "
                          "(jaxpr capture); 'enumerated' uses the hand "
                          "extraction tables")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="--continuous: admission-queue bound; overflow "
+                         "is shed with a terminal REJECTED result")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="--continuous: per-request deadline relative "
+                         "to arrival; requests still queued past it are "
+                         "EXPIRED instead of served late")
+    ap.add_argument("--watchdog-tick-s", type=float, default=None,
+                    help="--continuous: wall-clock budget per scheduler "
+                         "tick; slower ticks count sched.watchdog_trips")
+    ap.add_argument("--inject", default=None, metavar="SPECS",
+                    help="chaos fault schedule, e.g. "
+                         "'store.corrupt:0.01,kernel.nan_row@3' "
+                         "(see repro.faults.parse_faults)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed of the fault-injection RNG streams")
     args = ap.parse_args()
+
+    if args.inject:
+        from repro.faults import FaultInjector, parse_faults, set_injector
+        set_injector(FaultInjector(parse_faults(args.inject),
+                                   seed=args.chaos_seed))
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.fused_mlp:
@@ -144,7 +165,11 @@ def _serve_continuous(args, cfg, model, params, store) -> None:
     sched = ContinuousScheduler(
         eng, SchedConfig(slots=args.batch, chunk_widths=widths,
                          temperature=args.temperature,
-                         prewarm_source=args.prewarm_source),
+                         prewarm_source=args.prewarm_source,
+                         max_queue=args.max_queue,
+                         shed_on_full=args.max_queue is not None,
+                         default_deadline_s=args.deadline_s,
+                         watchdog_tick_s=args.watchdog_tick_s),
         arch_id=args.arch if store is not None else None,
         clock=clock.now, on_tick=on_tick)
     if store is not None:
@@ -166,6 +191,10 @@ def _serve_continuous(args, cfg, model, params, store) -> None:
           f"{summ['ttft_p95_s']:.3f}s  occupancy: "
           f"{summ['mean_slot_occupancy']:.2f}  chunks: "
           f"{summ['prefill_chunks']}")
+    if summ["rejected"] or summ["expired"] or summ["errored"]:
+        print(f"  degraded: rejected={summ['rejected']} "
+              f"expired={summ['expired']} errored={summ['errored']} "
+              f"(served {summ['served']}/{summ['requests']})")
 
 
 if __name__ == "__main__":

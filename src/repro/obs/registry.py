@@ -29,6 +29,20 @@ Conventions used across the repo:
   kernel.{gemm,fused_mlp}.dispatch   Python-level kernel dispatches
                                      (trace-time under jit)
   sched.*                         scheduler ticks / chunks / tokens
+
+Resilience namespaces (see ``repro.faults`` and DESIGN.md §Resilience):
+
+  faults.injected.<site>          deterministic fault injections fired
+  errors.*                        genuine faults observed (injected or
+                                  real): errors.store.{read_io,write_io,
+                                  corrupt}, errors.sched.nan_row
+  degraded.*                      graceful-degradation events taken in
+                                  response: degraded.store.{quarantined,
+                                  cold_resolves}, degraded.sched.{shed,
+                                  expired}, degraded.solver.bounded,
+                                  degraded.plans.bounded_served
+  sched.prewarm_failures          per-group/per-shape prewarm failures
+                                  that were logged and skipped
 """
 from __future__ import annotations
 

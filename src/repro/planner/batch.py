@@ -81,23 +81,70 @@ def cached_solve(gemm: Gemm, hw: AcceleratorSpec, *,
                  spatial_mode: str | None = None,
                  allowed_walk01: tuple[str, ...] | None = None,
                  store: PlanStore | None = None,
-                 warm_start: bool = False) -> SolveResult:
+                 warm_start: bool = False,
+                 budget_s: float | None = None) -> SolveResult:
     """Read-through ``core.solver.solve``: store hit -> no solve; miss ->
-    solve (optionally warm-started) and write back."""
+    solve (optionally warm-started, optionally budgeted) and write back.
+
+    A hit whose certificate is ``bounded`` (anytime incumbent) is served
+    as-is — a feasible plan beats a deadline miss — and counted under
+    ``degraded.plans.bounded_served`` so ``upgrade_bounded`` work can be
+    scheduled."""
     if store is None:
         return solve(gemm, hw, objective=objective,
                      spatial_mode=spatial_mode,
-                     allowed_walk01=allowed_walk01)
+                     allowed_walk01=allowed_walk01, budget_s=budget_s)
     key = plan_key(gemm, hw, objective=objective, spatial_mode=spatial_mode,
                    allowed_walk01=allowed_walk01)
     entry = store.get(key)
     if entry is not None:
+        if entry.certificate.bounded:
+            get_registry().inc("degraded.plans.bounded_served")
         return result_from_entry(entry, gemm, hw)
     incumbent = warm_incumbent(gemm, hw, key, store) if warm_start else None
     res = solve(gemm, hw, objective=objective, spatial_mode=spatial_mode,
-                allowed_walk01=allowed_walk01, incumbent=incumbent)
+                allowed_walk01=allowed_walk01, incumbent=incumbent,
+                budget_s=budget_s)
     store.put(PlanEntry.from_solve(key, res.certificate, hw))
     return res
+
+
+def upgrade_bounded(store: PlanStore, *, jobs: int | None = 1,
+                    engine: str | None = None) -> int:
+    """Background upgrade pass: re-solve every ``bounded`` (anytime)
+    entry to a zero-gap certificate, warm-started with its own UB, and
+    overwrite it under the same digest.  Returns the number upgraded.
+
+    Entries whose stored key parameters no longer reproduce their digest
+    (foreign solver version, legacy format) are skipped — never
+    corrupted.  Counted under ``planner.upgraded``."""
+    upgraded = 0
+    for e in list(store.entries()):
+        if not e.certificate.bounded:
+            continue
+        key = PlanKey(gemm_dims=e.gemm_dims, hw=e.hw,
+                      objective=e.key_objective or "energy",
+                      spatial_mode=e.key_spatial_mode,
+                      allowed_walk01=e.key_allowed_walk01)
+        if key.digest != e.digest:
+            get_registry().inc("planner.upgrade_skipped")
+            continue
+        gemm = Gemm(*e.gemm_dims)
+        res = solve(gemm, e.hw, objective=key.objective,
+                    spatial_mode=key.spatial_mode,
+                    allowed_walk01=key.allowed_walk01,
+                    incumbent=float(e.certificate.upper_bound),
+                    engine=engine)
+        cert = res.certificate
+        if cert.bounded or not cert.feasible:
+            continue        # shouldn't happen without a budget; be safe
+        assert cert.objective <= e.certificate.upper_bound \
+            * (1.0 + 1e-9) + 1e-9, \
+            "upgrade must never regress past the bounded UB"
+        store.put(PlanEntry.from_solve(key, cert, e.hw))
+        upgraded += 1
+        get_registry().inc("planner.upgraded")
+    return upgraded
 
 
 def cached_solve_chain(chain: GemmChain, hw: AcceleratorSpec, *,
@@ -142,13 +189,14 @@ class _SolveTask:
     spatial_mode: str | None
     allowed_walk01: tuple[str, ...] | None
     incumbent: float | None
+    budget_s: float | None = None
 
 
 def _solve_task(task: _SolveTask) -> tuple[str, "object"]:
     res = solve(task.gemm, task.hw, objective=task.objective,
                 spatial_mode=task.spatial_mode,
                 allowed_walk01=task.allowed_walk01,
-                incumbent=task.incumbent)
+                incumbent=task.incumbent, budget_s=task.budget_s)
     return task.digest, res.certificate
 
 
@@ -225,19 +273,22 @@ class BatchPlanner:
                    hw: AcceleratorSpec, *, objective: str = "energy",
                    spatial_mode: str | None = None,
                    allowed_walk01: tuple[str, ...] | None = None,
+                   budget_s: float | None = None,
                    ) -> list[ManifestEntry]:
         """Dedup -> hit/miss split -> parallel solve -> write-back.
 
-        Counted as ``planner.batches``; under a tracer the whole build
-        is one ``planner.plan_gemms`` span (store lookups and inline
-        solves nest inside it) whose attributes mirror the
-        ``BatchReport``."""
+        ``budget_s``: per-solve anytime budget — misses past it are
+        stored as ``bounded`` incumbents, to be finished later by
+        ``upgrade_bounded``.  Counted as ``planner.batches``; under a
+        tracer the whole build is one ``planner.plan_gemms`` span (store
+        lookups and inline solves nest inside it) whose attributes
+        mirror the ``BatchReport``."""
         get_registry().inc("planner.batches")
         with _obs_span("planner.plan_gemms", hw=hw.name,
                        objective=objective) as sp:
             entries = self._plan_gemms_impl(
                 gemms, hw, objective=objective, spatial_mode=spatial_mode,
-                allowed_walk01=allowed_walk01)
+                allowed_walk01=allowed_walk01, budget_s=budget_s)
             if sp:
                 rep = self.last_report
                 sp.attrs.update(rows=rep.total_gemms,
@@ -250,6 +301,7 @@ class BatchPlanner:
                          hw: AcceleratorSpec, *, objective: str = "energy",
                          spatial_mode: str | None = None,
                          allowed_walk01: tuple[str, ...] | None = None,
+                         budget_s: float | None = None,
                          ) -> list[ManifestEntry]:
         t0 = time.perf_counter()
         rows = list(gemms)
@@ -282,7 +334,8 @@ class BatchPlanner:
             tasks.append(_SolveTask(
                 digest=digest, gemm=slot["gemm"], hw=hw,
                 objective=objective, spatial_mode=spatial_mode,
-                allowed_walk01=allowed_walk01, incumbent=inc))
+                allowed_walk01=allowed_walk01, incumbent=inc,
+                budget_s=budget_s))
         certs = solve_many(tasks, jobs=self.jobs)
         if self.store is not None:
             for digest, cert in certs.items():

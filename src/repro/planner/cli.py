@@ -236,6 +236,49 @@ def cmd_verify(args) -> int:
     return 1 if bad or fused_bad else 0
 
 
+def cmd_fsck(args) -> int:
+    """Integrity scan: parse + checksum + digest check on every object."""
+    import json
+    store = _open_store(args)
+    report = store.fsck()
+    print(f"[fsck] {store.root}: checked={report['checked']} "
+          f"ok={report['ok']} legacy={report['legacy']} "
+          f"corrupt={len(report['corrupt'])} "
+          f"quarantined={report['quarantined']}")
+    for item in report["corrupt"]:
+        print(f"  CORRUPT {item['path']}: {item['reason']}")
+    if args.json:
+        print(json.dumps(report, indent=1, sort_keys=True))
+    return 1 if report["corrupt"] else 0
+
+
+def cmd_repair(args) -> int:
+    """Quarantine corrupt objects, checksum legacy entries."""
+    store = _open_store(args)
+    report = store.repair()
+    print(f"[repair] {store.root}: checked={report['checked']} "
+          f"quarantined_now={len(report['corrupt'])} "
+          f"rewritten={report['rewritten']} "
+          f"quarantined_total={report['quarantined']}")
+    for item in report["corrupt"]:
+        print(f"  QUARANTINED {item['path']}: {item['reason']}")
+    after = store.fsck()
+    print(f"[repair] post-check: ok={after['ok']}/{after['checked']} "
+          f"corrupt={len(after['corrupt'])}")
+    return 1 if after["corrupt"] else 0
+
+
+def cmd_upgrade(args) -> int:
+    """Re-solve bounded (anytime) entries to zero-gap certificates."""
+    from .batch import upgrade_bounded
+    store = _open_store(args)
+    bounded = sum(1 for e in store.entries() if e.certificate.bounded)
+    n = upgrade_bounded(store)
+    print(f"[upgrade] {store.root}: {bounded} bounded entries, "
+          f"{n} upgraded to zero-gap")
+    return 0
+
+
 def cmd_stats(args) -> int:
     """Observability snapshot: process registry + store + fidelity."""
     import json
@@ -435,6 +478,24 @@ def main(argv=None) -> int:
     f.add_argument("--verbose", "-v", action="store_true")
     _add_store_arg(f)
     f.set_defaults(fn=cmd_fidelity)
+
+    k = sub.add_parser("fsck", help="integrity-scan every store object "
+                                    "(parse, checksum, digest); exit 1 "
+                                    "if any is corrupt")
+    k.add_argument("--json", action="store_true",
+                   help="also dump the full report as JSON")
+    _add_store_arg(k)
+    k.set_defaults(fn=cmd_fsck)
+
+    r = sub.add_parser("repair", help="quarantine corrupt objects and "
+                                      "add checksums to legacy entries")
+    _add_store_arg(r)
+    r.set_defaults(fn=cmd_repair)
+
+    u = sub.add_parser("upgrade", help="re-solve bounded (anytime) "
+                                       "entries to zero-gap certificates")
+    _add_store_arg(u)
+    u.set_defaults(fn=cmd_upgrade)
 
     args = ap.parse_args(argv)
     return args.fn(args)

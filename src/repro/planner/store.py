@@ -15,9 +15,23 @@ Layout (git-friendly, no global index to corrupt):
 
 Writes are atomic (temp file + ``os.replace``); concurrent writers of the
 same key converge on identical bytes, so last-write-wins is benign.
+
+Durability (DESIGN.md §Resilience): every stored object carries a
+``checksum`` field — SHA-256 over the canonical JSON of the rest of the
+object — verified on read.  A corrupt entry (torn write, bit rot,
+checksum or digest mismatch, unparseable bytes) is moved to
+``<root>/quarantine/`` and reported as a miss, so the read-through
+caller re-solves cold instead of crashing; a transient read IO error is
+a plain miss.  A failed write keeps the entry in the in-process cache
+and returns False rather than raising.  All of these paths count under
+``errors.store.*`` / ``degraded.store.*``.  ``lock()`` provides an
+advisory ``flock`` over ``<root>/.lock`` for concurrent builders, and
+``fsck()``/``repair()`` back the ``python -m repro.plan fsck|repair``
+CLI.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
@@ -27,15 +41,26 @@ import tempfile
 import time
 from typing import Iterator
 
+try:
+    import fcntl
+except ImportError:          # non-POSIX: advisory locking degrades to no-op
+    fcntl = None
+
 from ..core.certificate import Certificate
 from ..core.fusion import ChainCertificate, GemmChain
 from ..core.geometry import Gemm, Mapping
 from ..core.hardware import AcceleratorSpec, Ert
 from ..core.solver import SOLVER_VERSION
+from ..faults import inject
 from ..obs.registry import get_registry
-from ..obs.tracing import span as _span
+from ..obs.tracing import span as _span, trace_event
 
 _REG = get_registry()
+
+
+class CorruptEntry(Exception):
+    """A stored object failed integrity verification (parse, checksum,
+    or digest-vs-filename)."""
 
 SCHEMA_VERSION = 1
 # Fused (chain) entries carry their own schema: the chain objective and
@@ -208,6 +233,7 @@ def certificate_to_json(c: Certificate) -> dict:
         "objective_kind": c.objective_kind,
         "warm_started": c.warm_started,
         "engine": c.engine,
+        "bounded": c.bounded,
     }
 
 
@@ -224,7 +250,8 @@ def certificate_from_json(d: dict) -> Certificate:
         spatial_mode=d["spatial_mode"], feasible=d["feasible"],
         objective_kind=d.get("objective_kind", "energy"),
         warm_started=d.get("warm_started", False),
-        engine=d.get("engine", "reference"))
+        engine=d.get("engine", "reference"),
+        bounded=d.get("bounded", False))
 
 
 def chain_certificate_to_json(c: ChainCertificate) -> dict:
@@ -357,6 +384,13 @@ class PlanEntry:
     mapping: Mapping | None
     certificate: Certificate
     created_unix: float
+    # the *requested* solve-key parameters (the certificate records what
+    # the solve fell back to, which can differ): with these a bounded
+    # entry can be re-solved to zero gap under the same digest
+    # (``BatchPlanner.upgrade_bounded``).  None on pre-resilience entries.
+    key_objective: str | None = None
+    key_spatial_mode: str | None = None
+    key_allowed_walk01: tuple[str, ...] | None = None
 
     @property
     def hw_name(self) -> str:
@@ -377,17 +411,27 @@ class PlanEntry:
             "mapping": mapping_to_json(self.mapping),
             "certificate": certificate_to_json(self.certificate),
             "created_unix": self.created_unix,
+            "key_objective": self.key_objective,
+            "key_spatial_mode": self.key_spatial_mode,
+            "key_allowed_walk01": (list(self.key_allowed_walk01)
+                                   if self.key_allowed_walk01 is not None
+                                   else None),
         }
 
     @classmethod
     def from_json(cls, d: dict) -> "PlanEntry":
+        walk = d.get("key_allowed_walk01")
         return cls(digest=d["digest"], family_digest=d["family_digest"],
                    gemm_dims=tuple(d["gemm_dims"]),
                    hw=spec_from_json(d["hw"]),
                    objective_kind=d["objective_kind"],
                    mapping=mapping_from_json(d["mapping"]),
                    certificate=certificate_from_json(d["certificate"]),
-                   created_unix=d["created_unix"])
+                   created_unix=d["created_unix"],
+                   key_objective=d.get("key_objective"),
+                   key_spatial_mode=d.get("key_spatial_mode"),
+                   key_allowed_walk01=tuple(walk) if walk is not None
+                   else None)
 
     @classmethod
     def from_solve(cls, key: PlanKey, certificate: Certificate,
@@ -396,7 +440,10 @@ class PlanEntry:
                    gemm_dims=key.gemm_dims, hw=hw,
                    objective_kind=certificate.objective_kind,
                    mapping=certificate.mapping, certificate=certificate,
-                   created_unix=time.time())
+                   created_unix=time.time(),
+                   key_objective=key.objective,
+                   key_spatial_mode=key.spatial_mode,
+                   key_allowed_walk01=key.allowed_walk01)
 
 
 class PlanStore:
@@ -416,9 +463,107 @@ class PlanStore:
         # family_digest -> [digest]; built lazily on the first
         # nearest_neighbor call, maintained by put()
         self._family_index: dict[str, list[str]] | None = None
+        self._lock_depth = 0
         self.hits = 0
         self.misses = 0
         self.puts = 0
+
+    # -- durability primitives ---------------------------------------------
+    @contextlib.contextmanager
+    def lock(self):
+        """Advisory exclusive inter-process lock on ``<root>/.lock``
+        (``flock``), for concurrent builders writing one store.
+        Re-entrant within a process; a no-op where fcntl is missing."""
+        if fcntl is None or self._lock_depth > 0:
+            self._lock_depth += 1
+            try:
+                yield
+            finally:
+                self._lock_depth -= 1
+            return
+        with open(self.root / ".lock", "a+") as fh:
+            fcntl.flock(fh.fileno(), fcntl.LOCK_EX)
+            self._lock_depth = 1
+            try:
+                yield
+            finally:
+                self._lock_depth = 0
+                fcntl.flock(fh.fileno(), fcntl.LOCK_UN)
+
+    def _quarantine(self, path: pathlib.Path, reason: str) -> None:
+        """Move a corrupt object out of the store (best-effort) and log
+        it to ``quarantine/log.jsonl``; the read that found it still
+        reports a miss either way."""
+        qdir = self.root / "quarantine"
+        try:
+            qdir.mkdir(parents=True, exist_ok=True)
+            dest = qdir / path.name
+            i = 0
+            while dest.exists():
+                i += 1
+                dest = qdir / f"{path.stem}.{i}{path.suffix}"
+            os.replace(path, dest)
+            with open(qdir / "log.jsonl", "a") as f:
+                f.write(json.dumps({"file": path.name, "reason": reason,
+                                    "unix": time.time()}) + "\n")
+        except OSError:
+            pass
+        _REG.inc("errors.store.corrupt")
+        _REG.inc("degraded.store.quarantined")
+        trace_event("store.quarantine", file=path.name, reason=reason)
+
+    @staticmethod
+    def _read_verified(path: pathlib.Path) -> dict:
+        """Read one stored object; raises OSError on IO faults and
+        CorruptEntry on parse/checksum failures.  Injection sites:
+        ``store.read_io`` (raise) and ``store.corrupt`` (mangle)."""
+        if inject("store.read_io") is not None:
+            raise OSError(f"injected read fault: {path.name}")
+        text = path.read_text()
+        if inject("store.corrupt") is not None:
+            text = text[: len(text) // 2] + "\x00"
+        try:
+            d = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise CorruptEntry(f"bad json: {e}") from e
+        if not isinstance(d, dict):
+            raise CorruptEntry("not a JSON object")
+        given = d.pop("checksum", None)
+        # entries written before checksums existed carry none: accepted
+        # here, surfaced by fsck(), rewritten by repair()
+        if given is not None and given != _digest_of(d):
+            raise CorruptEntry("checksum mismatch")
+        return d
+
+    def _write_object(self, path: pathlib.Path, payload: dict) -> bool:
+        """Checksummed atomic write (tmp + rename under the advisory
+        lock).  Returns False — counted, never raising — on an injected
+        or real IO failure, so a full disk degrades to an unpersisted
+        in-memory entry instead of a serving crash."""
+        payload = dict(payload)
+        payload["checksum"] = _digest_of(payload)
+        blob = json.dumps(payload, sort_keys=True, indent=1)
+        tmp = None
+        try:
+            if inject("store.write_io") is not None:
+                raise OSError(f"injected write fault: {path.name}")
+            path.parent.mkdir(parents=True, exist_ok=True)
+            with self.lock():
+                fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+                with os.fdopen(fd, "w") as f:
+                    f.write(blob)
+                os.replace(tmp, path)
+                tmp = None
+        except OSError:
+            _REG.inc("errors.store.write_io")
+            if tmp and os.path.exists(tmp):
+                os.unlink(tmp)
+            return False
+        except BaseException:
+            if tmp and os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return True
 
     # -- paths -------------------------------------------------------------
     def _path(self, digest: str) -> pathlib.Path:
@@ -434,9 +579,18 @@ class PlanStore:
         if not path.exists():
             return None
         try:
-            entry = PlanEntry.from_json(json.loads(path.read_text()))
-        except (json.JSONDecodeError, KeyError):
-            return None             # corrupt/foreign file: treat as miss
+            entry = PlanEntry.from_json(self._read_verified(path))
+            if entry.digest != digest:
+                raise CorruptEntry("digest != filename")
+        except OSError:
+            # transient IO: a miss, not a crash — caller re-solves cold
+            _REG.inc("errors.store.read_io")
+            _REG.inc("degraded.store.cold_resolves")
+            return None
+        except (CorruptEntry, KeyError, TypeError, ValueError) as e:
+            self._quarantine(path, reason=f"{type(e).__name__}: {e}")
+            _REG.inc("degraded.store.cold_resolves")
+            return None
         self._mem[digest] = entry
         return entry
 
@@ -459,19 +613,12 @@ class PlanStore:
         digest = key if isinstance(key, str) else key.digest
         return digest in self._mem or self._path(digest).exists()
 
-    def put(self, entry: PlanEntry) -> None:
-        path = self._path(entry.digest)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        blob = json.dumps(entry.to_json(), sort_keys=True, indent=1)
-        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                f.write(blob)
-            os.replace(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+    def put(self, entry: PlanEntry) -> bool:
+        """Persist one solve.  Returns False when the disk write failed
+        (counted ``errors.store.write_io``) — the entry still enters the
+        in-process cache so this process keeps serving it."""
+        persisted = self._write_object(self._path(entry.digest),
+                                       entry.to_json())
         self._mem[entry.digest] = entry
         if self._family_index is not None:
             fam = self._family_index.setdefault(entry.family_digest, [])
@@ -479,25 +626,38 @@ class PlanStore:
                 fam.append(entry.digest)
         self.puts += 1
         _REG.inc("plan_store.puts")
+        return persisted
 
     # -- fused (chain) entries ---------------------------------------------
     def _fused_path(self, digest: str) -> pathlib.Path:
         return self.root / "fused" / digest[:2] / f"{digest}.json"
 
+    def _load_fused(self, digest: str) -> FusedPlanEntry | None:
+        entry = self._fused_mem.get(digest)
+        if entry is not None:
+            return entry
+        path = self._fused_path(digest)
+        if not path.exists():
+            return None
+        try:
+            entry = FusedPlanEntry.from_json(self._read_verified(path))
+            if entry.digest != digest:
+                raise CorruptEntry("digest != filename")
+        except OSError:
+            _REG.inc("errors.store.read_io")
+            _REG.inc("degraded.store.cold_resolves")
+            return None
+        except (CorruptEntry, KeyError, TypeError, ValueError) as e:
+            self._quarantine(path, reason=f"{type(e).__name__}: {e}")
+            _REG.inc("degraded.store.cold_resolves")
+            return None
+        self._fused_mem[digest] = entry
+        return entry
+
     def get_fused(self, key: "ChainKey | str") -> FusedPlanEntry | None:
         digest = key if isinstance(key, str) else key.digest
         with _span("store.get_fused", digest=digest[:12]) as sp:
-            entry = self._fused_mem.get(digest)
-            if entry is None:
-                path = self._fused_path(digest)
-                if path.exists():
-                    try:
-                        entry = FusedPlanEntry.from_json(
-                            json.loads(path.read_text()))
-                    except (json.JSONDecodeError, KeyError):
-                        entry = None
-                    if entry is not None:
-                        self._fused_mem[digest] = entry
+            entry = self._load_fused(digest)
             if entry is None:
                 self.misses += 1
                 _REG.inc("plan_store.misses")
@@ -508,22 +668,13 @@ class PlanStore:
                 sp.attrs["hit"] = entry is not None
         return entry
 
-    def put_fused(self, entry: FusedPlanEntry) -> None:
-        path = self._fused_path(entry.digest)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        blob = json.dumps(entry.to_json(), sort_keys=True, indent=1)
-        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                f.write(blob)
-            os.replace(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+    def put_fused(self, entry: FusedPlanEntry) -> bool:
+        persisted = self._write_object(self._fused_path(entry.digest),
+                                       entry.to_json())
         self._fused_mem[entry.digest] = entry
         self.puts += 1
         _REG.inc("plan_store.puts")
+        return persisted
 
     def fused_entries(self) -> Iterator[FusedPlanEntry]:
         for path in sorted((self.root / "fused").glob("*/*.json")):
@@ -550,10 +701,78 @@ class PlanStore:
         # an *empty* store is still a store — never truth-test to None
         return True
 
+    def num_quarantined(self) -> int:
+        qdir = self.root / "quarantine"
+        return sum(1 for _ in qdir.glob("*.json")) if qdir.exists() else 0
+
     def stats(self) -> dict:
         return {"root": str(self.root), "entries": len(self),
                 "fused_entries": self.num_fused(),
+                "quarantined": self.num_quarantined(),
                 "hits": self.hits, "misses": self.misses, "puts": self.puts}
+
+    # -- integrity ---------------------------------------------------------
+    def _object_files(self) -> Iterator[tuple[pathlib.Path, type]]:
+        for base, loader in ((self.root / "objects", PlanEntry),
+                             (self.root / "fused", FusedPlanEntry)):
+            if not base.exists():
+                continue
+            for path in sorted(base.glob("*/*.json")):
+                yield path, loader
+
+    def fsck(self) -> dict:
+        """Integrity scan of every stored object: JSON parse, checksum,
+        schema round-trip, digest-vs-filename.  Read-only, and reads the
+        raw bytes directly so injection sites never fire — fsck reports
+        what is actually on disk."""
+        report: dict = {"checked": 0, "ok": 0, "legacy": 0, "corrupt": [],
+                        "quarantined": self.num_quarantined()}
+        for path, loader in self._object_files():
+            report["checked"] += 1
+            try:
+                d = json.loads(path.read_text())
+                if not isinstance(d, dict):
+                    raise CorruptEntry("not a JSON object")
+                given = d.pop("checksum", None)
+                if given is None:
+                    report["legacy"] += 1
+                elif given != _digest_of(d):
+                    raise CorruptEntry("checksum mismatch")
+                entry = loader.from_json(d)
+                if entry.digest != path.stem:
+                    raise CorruptEntry("digest != filename")
+            except (OSError, CorruptEntry, json.JSONDecodeError, KeyError,
+                    TypeError, ValueError) as e:
+                report["corrupt"].append(
+                    {"path": str(path.relative_to(self.root)),
+                     "reason": f"{type(e).__name__}: {e}"})
+                continue
+            report["ok"] += 1
+        return report
+
+    def repair(self) -> dict:
+        """Quarantine every corrupt object and rewrite legacy
+        (un-checksummed) entries with checksums, under the advisory
+        lock.  Quarantined plans re-enter the store through the normal
+        cold re-solve path; nothing is deleted."""
+        report = self.fsck()
+        rewritten = 0
+        with self.lock():
+            for item in report["corrupt"]:
+                path = self.root / item["path"]
+                if path.exists():
+                    self._quarantine(path, reason=item["reason"])
+            for path, _loader in self._object_files():
+                try:
+                    d = json.loads(path.read_text())
+                except (OSError, json.JSONDecodeError):
+                    continue
+                if isinstance(d, dict) and "checksum" not in d:
+                    if self._write_object(path, d):
+                        rewritten += 1
+        report["rewritten"] = rewritten
+        report["quarantined"] = self.num_quarantined()
+        return report
 
     # -- warm-start support ------------------------------------------------
     def _families(self) -> dict[str, list[str]]:
@@ -596,7 +815,8 @@ def resolve_default_store() -> PlanStore | None:
 # Ert is re-exported so batch workers can rebuild specs without importing
 # core.hardware directly (keeps the subprocess import surface small).
 __all__ = [
-    "CHAIN_SCHEMA_VERSION", "ChainKey", "Ert", "FusedPlanEntry",
+    "CHAIN_SCHEMA_VERSION", "ChainKey", "CorruptEntry", "Ert",
+    "FusedPlanEntry",
     "PLAN_DB_ENV", "PlanEntry", "PlanKey", "PlanStore",
     "SCHEMA_VERSION", "certificate_from_json", "certificate_to_json",
     "chain_certificate_from_json", "chain_certificate_to_json",

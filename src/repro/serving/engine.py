@@ -18,12 +18,17 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..models.model import Model
+from ..obs.registry import get_registry
+
+_REG = get_registry()
+_LOG = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -134,7 +139,12 @@ class Engine:
                        dtype_bytes: int | None = None) -> int:
         """Plan an explicit (M, N, K) shape list through the installed
         store (or the in-process cache when none is).  Shared by
-        ``prewarm_plans`` and the scheduler's bucketed prewarm."""
+        ``prewarm_plans`` and the scheduler's bucketed prewarm.
+
+        Best-effort: one unplannable shape is logged, counted under
+        ``sched.prewarm_failures`` and skipped — it will solve cold at
+        first dispatch instead of failing the whole prewarm.  Returns
+        #shapes actually planned."""
         from ..planner.batch import prewarm_tpu_plans
         from ..planner.store import resolve_default_store
         if dtype_bytes is None:
@@ -142,12 +152,22 @@ class Engine:
         shapes = list(shapes)
         store = (self.plan_store if self.plan_store is not None
                  else resolve_default_store())
-        if store is None:
-            from ..core.tpu_mapping import plan_gemm_tiling
-            for s in shapes:        # in-process lru warm only
-                plan_gemm_tiling(*s, dtype_bytes=dtype_bytes)
-            return len(shapes)
-        return prewarm_tpu_plans(shapes, store, dtype_bytes=dtype_bytes)
+        planned = 0
+        for s in shapes:
+            try:
+                if store is None:
+                    from ..core.tpu_mapping import plan_gemm_tiling
+                    plan_gemm_tiling(*s, dtype_bytes=dtype_bytes)
+                    planned += 1
+                else:
+                    planned += prewarm_tpu_plans(
+                        [s], store, dtype_bytes=dtype_bytes)
+            except Exception as e:
+                _REG.inc("sched.prewarm_failures")
+                _LOG.warning("prewarm failed for GEMM shape %s (%s: %s); "
+                             "it will solve at dispatch", s,
+                             type(e).__name__, e)
+        return planned
 
     def prewarm_chains(self, chains, *,
                        dtype_bytes: int | None = None) -> int:
@@ -155,7 +175,8 @@ class Engine:
         through the installed store's fused section (or the in-process
         cache).  The fused counterpart of ``prewarm_shapes``: after this,
         a ``fused_mlp``-routed model resolves every chain plan from
-        cache — zero chain solves in steady state."""
+        cache — zero chain solves in steady state.  Best-effort, like
+        ``prewarm_shapes``."""
         from ..planner.batch import prewarm_fused_plans
         from ..planner.store import resolve_default_store
         if dtype_bytes is None:
@@ -163,12 +184,22 @@ class Engine:
         chains = list(chains)
         store = (self.plan_store if self.plan_store is not None
                  else resolve_default_store())
-        if store is None:
-            from ..core.tpu_mapping import plan_fused_mlp
-            for c in chains:        # in-process lru warm only
-                plan_fused_mlp(*c, dtype_bytes=dtype_bytes)
-            return len(chains)
-        return prewarm_fused_plans(chains, store, dtype_bytes=dtype_bytes)
+        planned = 0
+        for c in chains:
+            try:
+                if store is None:
+                    from ..core.tpu_mapping import plan_fused_mlp
+                    plan_fused_mlp(*c, dtype_bytes=dtype_bytes)
+                    planned += 1
+                else:
+                    planned += prewarm_fused_plans(
+                        [c], store, dtype_bytes=dtype_bytes)
+            except Exception as e:
+                _REG.inc("sched.prewarm_failures")
+                _LOG.warning("prewarm failed for fused chain %s (%s: %s); "
+                             "it will solve at dispatch", c,
+                             type(e).__name__, e)
+        return planned
 
     @property
     def dispatch_dtype_bytes(self) -> int:

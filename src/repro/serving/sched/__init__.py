@@ -13,7 +13,8 @@ Public surface:
 """
 from .buckets import BucketSpec, Chunk
 from .metrics import ServingMetrics
-from .requests import Request, RequestResult, RequestState
+from .requests import (TERMINAL_STATES, Request, RequestResult,
+                       RequestState)
 from .scheduler import SUPPORTED_FAMILIES, ContinuousScheduler, SchedConfig
 from .slots import Slot, SlotManager
 from .traffic import (TraceClock, TrafficConfig, poisson_trace, replay,
@@ -22,6 +23,7 @@ from .traffic import (TraceClock, TrafficConfig, poisson_trace, replay,
 __all__ = [
     "BucketSpec", "Chunk", "ContinuousScheduler", "Request",
     "RequestResult", "RequestState", "SUPPORTED_FAMILIES", "SchedConfig",
-    "ServingMetrics", "Slot", "SlotManager", "TraceClock",
-    "TrafficConfig", "poisson_trace", "replay", "run_static_baseline",
+    "ServingMetrics", "Slot", "SlotManager", "TERMINAL_STATES",
+    "TraceClock", "TrafficConfig", "poisson_trace", "replay",
+    "run_static_baseline",
 ]

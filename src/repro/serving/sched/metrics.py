@@ -64,17 +64,30 @@ class ServingMetrics:
         return self.total_generated / self.elapsed_s
 
     def summary(self) -> dict:
-        ttft = [r.ttft_s for r in self.results]
+        # shed requests (rejected/expired, and errored before their
+        # first token) carry NaN first_token_s — latency percentiles are
+        # computed over served requests only, or they'd all go NaN
+        ttft = [r.ttft_s for r in self.results
+                if r.n_generated > 0 and np.isfinite(r.first_token_s)]
         # per-token decode latency: generation span / tokens after the
         # first.  When *every* request generated <=1 token the sample
         # list is empty and percentiles would be NaN — report 0.0 so the
         # summary stays JSON-round-trippable and threshold-comparable.
         tpot = [(r.finish_s - r.first_token_s) / (r.n_generated - 1)
-                for r in self.results if r.n_generated > 1]
+                for r in self.results
+                if r.n_generated > 1 and np.isfinite(r.first_token_s)]
         tpot_p50 = _pct(tpot, 50) if tpot else 0.0
         tpot_p95 = _pct(tpot, 95) if tpot else 0.0
+        by_reason: dict[str, int] = {}
+        for r in self.results:
+            by_reason[r.finish_reason] = by_reason.get(r.finish_reason,
+                                                       0) + 1
         return {
             "requests": len(self.results),
+            "served": sum(1 for r in self.results if not r.shed),
+            "rejected": by_reason.get("rejected", 0),
+            "expired": by_reason.get("expired", 0),
+            "errored": by_reason.get("errored", 0),
             "total_generated_tokens": self.total_generated,
             "elapsed_s": round(self.elapsed_s, 6),
             "tokens_per_s": round(self.tokens_per_s, 3),

@@ -18,6 +18,15 @@ class RequestState(enum.Enum):
     PREFILLING = "prefilling"  # owns a slot; chunks being written
     ACTIVE = "active"          # in the decode batch
     FINISHED = "finished"
+    # terminal degraded states (overload shedding / fault isolation):
+    REJECTED = "rejected"      # shed at admission (queue full)
+    EXPIRED = "expired"        # deadline passed while still queued
+    ERRORED = "errored"        # evicted mid-flight (e.g. NaN/Inf logits)
+
+#: states a request can never leave; their RequestResult.finish_reason
+#: is the state's value
+TERMINAL_STATES = (RequestState.FINISHED, RequestState.REJECTED,
+                   RequestState.EXPIRED, RequestState.ERRORED)
 
 
 @dataclasses.dataclass
@@ -27,6 +36,10 @@ class Request:
     max_new_tokens: int
     arrival_s: float = 0.0              # trace time (replay harness)
     stop_token: int | None = None       # None -> scheduler default
+    deadline_s: float | None = None     # absolute trace-time deadline; a
+    #                                     request still *queued* past it is
+    #                                     expired (None -> scheduler
+    #                                     default_deadline_s, if any)
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
@@ -45,9 +58,11 @@ class Request:
 class RequestResult:
     req_id: int
     tokens: list[int]                   # generated tokens, stop included
-    finish_reason: str                  # "stop" | "length"
+    finish_reason: str                  # "stop" | "length" | "rejected"
+    #                                     | "expired" | "errored"
     prompt_len: int
-    # trace-clock timestamps (seconds since scheduler start)
+    # trace-clock timestamps (seconds since scheduler start);
+    # first_token_s is NaN for requests shed before their first token
     arrival_s: float
     first_token_s: float
     finish_s: float
@@ -59,3 +74,9 @@ class RequestResult:
     @property
     def n_generated(self) -> int:
         return len(self.tokens)
+
+    @property
+    def shed(self) -> bool:
+        """True when the scheduler terminated this request without
+        honoring it (admission shed, queue expiry, or fault eviction)."""
+        return self.finish_reason in ("rejected", "expired", "errored")

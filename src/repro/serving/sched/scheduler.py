@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import time
 from typing import Callable
 
@@ -39,9 +40,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...faults import inject
 from ...obs.registry import get_registry
 from ...obs.tracing import get_tracer
 from ...obs.tracing import span as _span
+from ...obs.tracing import trace_event
 from ..engine import Engine, gumbel_argmax
 from .buckets import BucketSpec, Chunk
 from .metrics import ServingMetrics
@@ -49,6 +52,7 @@ from .requests import Request, RequestResult, RequestState
 from .slots import Slot, SlotManager
 
 _REG = get_registry()
+_LOG = logging.getLogger(__name__)
 
 # Families whose cache is a pure per-layer KV tensor with batch on axis 1
 # (slot grafting + slot-indexed writes assume that layout).  Recurrent
@@ -75,6 +79,19 @@ class SchedConfig:
     #                                     decode-step programs;
     #                                     "enumerated": the hand
     #                                     extraction tables (arch_id)
+    # --- degradation knobs (DESIGN.md §Resilience) ---
+    shed_on_full: bool = False          # queue full: return a terminal
+    #                                     REJECTED result instead of
+    #                                     raising (load shedding)
+    default_deadline_s: float | None = None   # per-request deadline
+    #                                     relative to arrival, applied
+    #                                     when Request.deadline_s is None;
+    #                                     requests still queued past it
+    #                                     are EXPIRED at the next tick
+    watchdog_tick_s: float | None = None      # wall-clock budget for one
+    #                                     tick; slower ticks trip
+    #                                     sched.watchdog_trips (detection
+    #                                     only — the tick still completes)
 
 
 @dataclasses.dataclass
@@ -160,9 +177,13 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------ plan DB
     def _prewarm(self, arch_id: str) -> int:
+        """Best-effort bucketed prewarm: any one group failing to plan
+        must not take down scheduler construction — the serving loop
+        still works (those shapes just solve cold at first dispatch),
+        so each failure is logged, counted (``sched.prewarm_failures``)
+        and skipped."""
         from ...planner.batch import (bucketed_serving_fused_chain_groups,
-                                      bucketed_serving_plan_shape_groups,
-                                      flatten_shape_groups)
+                                      bucketed_serving_plan_shape_groups)
         if getattr(self.engine.model.cfg, "fused_mlp", False):
             # a fused-MLP model dispatches one chain plan per bucket
             # group instead of the per-GEMM gate/up/down tilings; the
@@ -171,30 +192,69 @@ class ContinuousScheduler:
             # matches dispatch even for smoke/reduced variants — and
             # chains go first so a capture-mode trace below resolves
             # its fused-kernel plans from the warm cache.
-            self._chain_groups = bucketed_serving_fused_chain_groups(
-                arch_id, slots=self.cfg.slots,
-                chunk_widths=self.buckets.chunk_widths,
-                cache_len=self.engine.cfg.cache_len,
-                cfg=self.engine.model.cfg)
-            self.prewarmed_chains = self.engine.prewarm_chains(
-                flatten_shape_groups(self._chain_groups))
-        if self.cfg.prewarm_source == "capture":
-            # per-bucket GEMM groups read off the engine model's own
-            # jaxpr-traced decode-step programs (chunked-prefill
-            # continuations at each width + the slot-batched decode):
-            # prewarmed plans match actual dispatch by construction
-            from ...capture.plan import captured_serving_plan_shape_groups
-            self._plan_groups = captured_serving_plan_shape_groups(
-                self.engine.model, slots=self.cfg.slots,
-                chunk_widths=self.buckets.chunk_widths,
-                cache_len=self.engine.cfg.cache_len)
-        else:
-            self._plan_groups = bucketed_serving_plan_shape_groups(
-                arch_id, slots=self.cfg.slots,
-                chunk_widths=self.buckets.chunk_widths,
-                cache_len=self.engine.cfg.cache_len)
-        return self.engine.prewarm_shapes(
-            flatten_shape_groups(self._plan_groups))
+            try:
+                self._chain_groups = bucketed_serving_fused_chain_groups(
+                    arch_id, slots=self.cfg.slots,
+                    chunk_widths=self.buckets.chunk_widths,
+                    cache_len=self.engine.cfg.cache_len,
+                    cfg=self.engine.model.cfg)
+            except Exception as e:
+                self._chain_groups = {}
+                _REG.inc("sched.prewarm_failures")
+                _LOG.warning("fused chain-group derivation failed "
+                             "(%s: %s); chains will solve at dispatch",
+                             type(e).__name__, e)
+            seen_chains: set[tuple[int, ...]] = set()
+            for group, chains in self._chain_groups.items():
+                fresh_chains = [c for c in chains
+                                if c not in seen_chains]
+                seen_chains.update(fresh_chains)
+                if not fresh_chains:
+                    continue
+                try:
+                    self.prewarmed_chains += \
+                        self.engine.prewarm_chains(fresh_chains)
+                except Exception as e:
+                    _REG.inc("sched.prewarm_failures")
+                    _LOG.warning("chain prewarm failed for group %r "
+                                 "(%s: %s); continuing", group,
+                                 type(e).__name__, e)
+        try:
+            if self.cfg.prewarm_source == "capture":
+                # per-bucket GEMM groups read off the engine model's own
+                # jaxpr-traced decode-step programs (chunked-prefill
+                # continuations at each width + the slot-batched decode):
+                # prewarmed plans match actual dispatch by construction
+                from ...capture.plan import \
+                    captured_serving_plan_shape_groups
+                self._plan_groups = captured_serving_plan_shape_groups(
+                    self.engine.model, slots=self.cfg.slots,
+                    chunk_widths=self.buckets.chunk_widths,
+                    cache_len=self.engine.cfg.cache_len)
+            else:
+                self._plan_groups = bucketed_serving_plan_shape_groups(
+                    arch_id, slots=self.cfg.slots,
+                    chunk_widths=self.buckets.chunk_widths,
+                    cache_len=self.engine.cfg.cache_len)
+        except Exception as e:
+            self._plan_groups = {}
+            _REG.inc("sched.prewarm_failures")
+            _LOG.warning("plan-group derivation failed (%s: %s); GEMMs "
+                         "will solve at dispatch", type(e).__name__, e)
+        planned = 0
+        seen: set[tuple[int, int, int]] = set()
+        for group, shapes in self._plan_groups.items():
+            fresh = [s for s in shapes if s not in seen]
+            seen.update(fresh)
+            if not fresh:
+                continue
+            try:
+                planned += self.engine.prewarm_shapes(fresh)
+            except Exception as e:
+                _REG.inc("sched.prewarm_failures")
+                _LOG.warning("plan prewarm failed for group %r (%s: %s); "
+                             "continuing", group, type(e).__name__, e)
+        return planned
 
     def _resolve_plans(self, group: str) -> None:
         """Resolve the tile plans one phase dispatches, once per group
@@ -213,10 +273,13 @@ class ContinuousScheduler:
         self._resolved_groups.add(group)
 
     # ---------------------------------------------------------- admission
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> RequestResult | None:
         """Validate and enqueue.  Raises ValueError when the request can
         never fit the static cache (clear error instead of a silent
-        overflow) and RuntimeError when the queue is full."""
+        overflow).  A full queue raises RuntimeError, unless
+        ``shed_on_full`` is set — then the request is shed with an
+        explicit terminal REJECTED result (returned, recorded, and
+        streamed through ``on_finish`` like any other completion)."""
         self.engine.validate_capacity(req.prompt_len, req.max_new_tokens)
         padded = self.buckets.padded_len(req.prompt_len)
         if padded > self.engine.cfg.cache_len:
@@ -227,10 +290,53 @@ class ContinuousScheduler:
         if self.cfg.max_queue is not None and \
                 len(self.queue) >= self.cfg.max_queue:
             self.rejected += 1
+            if self.cfg.shed_on_full:
+                _REG.inc("degraded.sched.shed")
+                return self._finish_unstarted(
+                    req, RequestState.REJECTED, self.clock())
             raise RuntimeError(
                 f"admission queue full ({self.cfg.max_queue}); request "
                 f"{req.req_id} rejected")
         self.queue.append(req)
+        return None
+
+    def _deadline_of(self, req: Request) -> float | None:
+        if req.deadline_s is not None:
+            return req.deadline_s
+        if self.cfg.default_deadline_s is not None:
+            return req.arrival_s + self.cfg.default_deadline_s
+        return None
+
+    def _expire_queue(self, now: float) -> None:
+        """Drop queued requests whose deadline already passed — serving
+        them would waste prefill on an answer nobody is waiting for.
+        In-flight requests are never expired: once a slot is claimed the
+        work is sunk and the token stream stays oracle-identical."""
+        if not self.queue:
+            return
+        keep: collections.deque[Request] = collections.deque()
+        for req in self.queue:
+            dl = self._deadline_of(req)
+            if dl is not None and now > dl:
+                _REG.inc("degraded.sched.expired")
+                self._finish_unstarted(req, RequestState.EXPIRED, now)
+            else:
+                keep.append(req)
+        self.queue = keep
+
+    def _finish_unstarted(self, req: Request, state: RequestState,
+                          now: float) -> RequestResult:
+        """Terminal result for a request shed before its first token."""
+        res = RequestResult(
+            req_id=req.req_id, tokens=[], finish_reason=state.value,
+            prompt_len=req.prompt_len, arrival_s=req.arrival_s,
+            first_token_s=float("nan"), finish_s=now)
+        self.results.append(res)
+        self.metrics.record_result(res)
+        trace_event(f"sched.{state.value}", req_id=req.req_id)
+        if self.on_finish is not None:
+            self.on_finish(res)
+        return res
 
     @property
     def busy(self) -> bool:
@@ -253,8 +359,18 @@ class ContinuousScheduler:
         admission opens a detached per-request ``sched.request`` span
         that ``_emit`` closes at finish.  Registry counters mirror the
         ``ServingMetrics`` tick accounting under ``sched.*``."""
+        wall0 = time.perf_counter()
         with _span("sched.tick", tick=self.metrics.steps) as tick_sp:
             self._step_inner(tick_sp)
+        wall = time.perf_counter() - wall0
+        if self.cfg.watchdog_tick_s is not None and \
+                wall > self.cfg.watchdog_tick_s:
+            # stuck-tick watchdog: detection only — the tick already ran
+            # to completion, so state is consistent; the trip surfaces in
+            # counters/traces for the operator instead of wedging silently
+            _REG.inc("sched.watchdog_trips")
+            trace_event("sched.watchdog", duration_s=wall,
+                        budget_s=self.cfg.watchdog_tick_s)
         if self.on_tick is not None:
             self.on_tick(self)
 
@@ -264,6 +380,14 @@ class ContinuousScheduler:
         chunks_run = 0
         padded_tokens = 0
         _REG.inc("sched.ticks")
+        hit = inject("sched.slow_tick")
+        if hit is not None:             # chaos: stall this tick so the
+            time.sleep(float(hit.payload.get("stall_s", 0.02)))  # watchdog
+        #                                 has something real to catch
+
+        # 0. deadline sweep over the queue (before admission, so a
+        # request that expired while waiting never claims a slot)
+        self._expire_queue(self.clock())
 
         # 1. admission: start prefilling the oldest queued request
         if self._prefill is None and self.queue and self.slots.n_free:
@@ -321,7 +445,14 @@ class ContinuousScheduler:
                 positions = jnp.asarray(self._pos)
                 logits, self.slot_cache = self.engine.decode_slots(
                     self.slot_cache, tokens, positions)
-                nxt = self._sample_rows(logits[:, -1], active)
+                last = logits[:, -1]
+                hit = inject("kernel.nan_row")
+                if hit is not None:     # chaos: poison one active row's
+                    victim = active[hit.index % len(active)].idx
+                    bad = float(hit.payload.get("value", float("nan")))
+                    last = last.at[victim].set(bad)      # logits in-place
+                active = self._guard_rows(last, active)
+                nxt = self._sample_rows(last, active) if active else None
             now = self.clock()
             for slot in active:
                 tok = int(nxt[slot.idx])
@@ -344,11 +475,59 @@ class ContinuousScheduler:
             padded_rows=padded_rows)
         self.metrics.finished_s = self.clock()
 
+    # ------------------------------------------------------ fault isolation
+    def _guard_rows(self, last, active: list[Slot]) -> list[Slot]:
+        """Evict active slots whose logits row went NaN/Inf — a poisoned
+        row must never reach sampling (Gumbel/argmax over NaN silently
+        picks an arbitrary token).  Only the poisoned rows pay: slot rows
+        are batch-independent, so the survivors' streams are untouched
+        and stay token-identical to the fault-free oracle."""
+        finite = np.asarray(jnp.all(jnp.isfinite(last), axis=-1))
+        bad = [s for s in active if not finite[s.idx]]
+        if not bad:
+            return active
+        now = self.clock()
+        for slot in bad:
+            self._evict_errored(slot, now)
+        return [s for s in active if finite[s.idx]]
+
+    def _evict_errored(self, slot: Slot, now: float) -> None:
+        """Terminal ERRORED eviction of one in-flight slot: the tokens
+        streamed so far are kept, the slot is freed, the rest of the
+        batch keeps decoding."""
+        req = slot.req
+        _REG.inc("errors.sched.nan_row")
+        _REG.inc("sched.errored")
+        res = RequestResult(
+            req_id=req.req_id, tokens=list(slot.tokens),
+            finish_reason=RequestState.ERRORED.value,
+            prompt_len=req.prompt_len, arrival_s=req.arrival_s,
+            first_token_s=slot.first_token_s if slot.emitted
+            else float("nan"), finish_s=now)
+        self.results.append(res)
+        self.metrics.record_result(res)
+        trace_event("sched.errored", req_id=req.req_id,
+                    n_generated=res.n_generated)
+        tr = get_tracer()
+        rsp = self._req_spans.pop(req.req_id, None)
+        if tr is not None and rsp is not None:
+            tr.end(rsp, n_generated=res.n_generated,
+                   finish_reason=res.finish_reason)
+        if self.on_finish is not None:
+            self.on_finish(res)
+        self.slots.release(slot)
+
     def _activate(self, pf: _Prefill, logits, last_chunk: Chunk) -> None:
         """Last chunk done: sample the first token, graft the row into
         the slot cache, and join the decode batch."""
         slot, req = pf.slot, pf.slot.req
         row_logits = logits[0, last_chunk.n_real - 1]
+        if not bool(np.isfinite(np.asarray(row_logits)).all()):
+            # poisoned prefill output: evict before the row ever joins
+            # the decode batch (no token was emitted for it yet)
+            self._evict_errored(slot, self.clock())
+            self._prefill_cache = pf.cache
+            return
         tok = self._sample_one(row_logits, self._step_key(req, 0))
         self.slot_cache = self.engine.insert_row(
             self.slot_cache, pf.cache, slot.idx)
@@ -412,7 +591,16 @@ class ContinuousScheduler:
 
         Greedy is batch-wide argmax (bit-identical to the oracle's).
         Temperature uses one key per (request, token index) — the same
-        fold_in schedule as ``Engine.generate`` — vmapped over rows."""
+        fold_in schedule as ``Engine.generate`` — vmapped over rows.
+
+        Non-finite entries are masked to -inf first: Gumbel noise added
+        to a NaN logit is NaN, and ``argmax`` over NaNs silently returns
+        an arbitrary (implementation-defined) token — a poisoned row
+        must never turn into a plausible-looking sample.  Rows that are
+        *entirely* non-finite are evicted upstream (``_guard_rows``)
+        before sampling; the mask here keeps a stray ±inf/NaN element in
+        an otherwise-healthy row from hijacking its argmax."""
+        logits = jnp.where(jnp.isfinite(logits), logits, -jnp.inf)
         if self.cfg.temperature <= 0.0:
             return np.asarray(self.engine.sample(logits, None))
         keys = [jax.random.PRNGKey(0)] * len(self.slots)

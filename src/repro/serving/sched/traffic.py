@@ -19,6 +19,7 @@ import time
 
 import numpy as np
 
+from ...faults import inject
 from ..engine import Engine
 from .requests import Request, RequestResult
 from .scheduler import ContinuousScheduler
@@ -105,7 +106,10 @@ def replay(scheduler: ContinuousScheduler, requests: list[Request],
     pending = collections.deque(sorted(requests,
                                        key=lambda r: r.arrival_s))
     while pending or scheduler.busy:
-        while pending and pending[0].arrival_s <= clock.now() + 1e-12:
+        # chaos: a traffic.burst hit collapses the next arrival gap to
+        # zero — the request lands *now*, exercising admission control
+        while pending and (pending[0].arrival_s <= clock.now() + 1e-12
+                           or inject("traffic.burst") is not None):
             scheduler.submit(pending.popleft())
         if not scheduler.busy:
             clock.wait_until(pending[0].arrival_s)

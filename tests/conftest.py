@@ -18,12 +18,16 @@ def _reset_observability():
     behind recomputation; tests that need a cold cache call
     ``clear_axis_cache()`` themselves).  The installed tracer, if any,
     is also cleared — a test that installs one must not leak spans into
-    its neighbors."""
+    its neighbors.  Likewise the global fault injector: a chaos test's
+    fault schedule must never bleed into the next test."""
+    from repro.faults import set_injector
     from repro.obs.registry import get_registry
     from repro.obs.tracing import set_tracer
 
     get_registry().reset()
     set_tracer(None)
+    set_injector(None)
     yield
     get_registry().reset()
     set_tracer(None)
+    set_injector(None)
