@@ -33,6 +33,11 @@ Suites:
              NaN row + stalled tick): zero crashes, served requests
              token-identical, throughput >= 0.9x fault-free ->
              BENCH_resilience.json at the root
+  dist       joint (mesh partition, per-chip tiling) co-solve vs the
+             independent single-axis composition across 2-16 chip
+             meshes + TP-sharded serving token identity (needs >= 4
+             devices, e.g. forced host devices via XLA_FLAGS) ->
+             BENCH_dist.json at the root
 """
 from __future__ import annotations
 
@@ -117,6 +122,9 @@ def main() -> None:
     if on("resilience"):
         import bench_resilience
         guarded("resilience", lambda: bench_resilience.run())
+    if on("dist"):
+        import bench_dist
+        guarded("dist", lambda: bench_dist.run(smoke=False))
     if on("roofline"):
         try:
             import bench_roofline

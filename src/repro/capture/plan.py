@@ -27,9 +27,11 @@ from ..core.hardware import AcceleratorSpec
 from ..core.solver import SOLVER_VERSION
 from ..obs.registry import get_registry
 from ..obs.tracing import span as _span
-from ..planner.batch import BatchPlanner, cached_solve_chain
-from ..planner.manifest import ModelMappingManifest
-from ..planner.store import PlanStore
+from ..planner.batch import (BatchPlanner, cached_solve_chain,
+                             cached_solve_sharded)
+from ..planner.manifest import (ModelMappingManifest, ShardedManifestEntry,
+                                ShardedModelManifest)
+from ..planner.store import PlanStore, sharded_plan_key
 from .program import PlanProgram, captured_program
 
 
@@ -117,6 +119,93 @@ def plan_program(program: PlanProgram, hw: AcceleratorSpec, *,
     return ProgramPlan(program=program, manifest=manifest,
                        chain_rows=chain_rows,
                        wall_time_s=time.perf_counter() - t0)
+
+
+@dataclasses.dataclass
+class ShardedProgramPlan:
+    """Outcome of one sharded plan pass: the ShardedModelManifest plus
+    the live solve results (per-chip mappings, PartitionSpecs)."""
+
+    program: PlanProgram
+    manifest: ShardedModelManifest
+    results: dict[tuple[int, int, int], object]   # dims -> ShardedSolveResult
+    wall_time_s: float
+
+    @property
+    def feasible(self) -> bool:
+        return self.manifest.feasible
+
+    @property
+    def zero_gap(self) -> bool:
+        return self.manifest.zero_gap
+
+    def summary(self) -> str:
+        lines = [self.program.summary(), self.manifest.summary()]
+        for e in self.manifest.entries:
+            mesh = (f"x{e.counts[0]}y{e.counts[1]}z{e.counts[2]}"
+                    if e.counts else "infeasible")
+            lines.append(f"  {e.gemm_type} w={e.weight} {e.dims} -> {mesh} "
+                         f"[{e.collectives}] joint={e.objective:.4g} "
+                         f"ind={e.independent_objective:.4g}")
+        return "\n".join(lines)
+
+
+def plan_sharded_program(program: PlanProgram, hw: AcceleratorSpec,
+                         n_chips: int, *,
+                         store: PlanStore | None = None,
+                         dtype_bytes: int = 1,
+                         spatial_mode: str | None = None,
+                         allowed_walk01: tuple[str, ...] | None = None
+                         ) -> ShardedProgramPlan:
+    """Lower a PlanProgram to a sharded manifest: each distinct GEMM is
+    co-solved for (mesh partition, per-chip tiling) on ``n_chips`` x
+    ``hw`` through the store's sharded section (misses populate it, and
+    every enumerated sub-GEMM plan lands in the single-chip section as a
+    side effect — see ``cached_solve_sharded``)."""
+    t0 = time.perf_counter()
+    get_registry().inc("dist.program_plans")
+    with _span("capture.plan_sharded_program", program=program.name,
+               hw=hw.name, n_chips=n_chips) as sp:
+        # dedup by dims, accumulating weights — the manifest row protocol
+        order: list[tuple[str, tuple[int, int, int]]] = []
+        weights: dict[tuple[int, int, int], int] = {}
+        gemm_of: dict[tuple[int, int, int], object] = {}
+        for label, gemm, weight in program.gemm_rows():
+            if gemm.dims not in weights:
+                order.append((label, gemm.dims))
+                gemm_of[gemm.dims] = gemm
+            weights[gemm.dims] = weights.get(gemm.dims, 0) + weight
+        results: dict[tuple[int, int, int], object] = {}
+        entries: list[ShardedManifestEntry] = []
+        for label, dims in order:
+            gemm = gemm_of[dims]
+            key = sharded_plan_key(gemm, hw, n_chips,
+                                   dtype_bytes=dtype_bytes,
+                                   spatial_mode=spatial_mode,
+                                   allowed_walk01=allowed_walk01)
+            cached = store is not None and store.contains_sharded(key)
+            res = cached_solve_sharded(
+                gemm, hw, n_chips, dtype_bytes=dtype_bytes,
+                spatial_mode=spatial_mode, allowed_walk01=allowed_walk01,
+                store=store)
+            c = res.certificate
+            results[dims] = res
+            entries.append(ShardedManifestEntry(
+                gemm_type=label, dims=dims, weight=weights[dims],
+                digest=key.digest, counts=c.counts,
+                collectives=c.collectives, objective=c.objective,
+                independent_objective=c.independent_objective,
+                feasible=c.feasible, gap=c.gap, cached=cached,
+                solve_time_s=c.solve_time_s))
+        manifest = ShardedModelManifest(
+            model=program.name, hw_name=hw.name, n_chips=n_chips,
+            dtype_bytes=dtype_bytes, entries=entries,
+            solver_version=SOLVER_VERSION)
+        if sp:
+            sp.attrs.update(entries=len(entries))
+    return ShardedProgramPlan(program=program, manifest=manifest,
+                              results=results,
+                              wall_time_s=time.perf_counter() - t0)
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,14 @@ class Ert:
     rf_leak: float = 0.0
     # spatial-reduction adder energy; timeloop default = 0 (paper eq. 22)
     spatial_reduce: float = 0.0
+    # inter-chip interconnect (ICI/NVLink-class), pJ per 8-bit word moved
+    # over one link hop.  Prices the mesh as one more memory level above
+    # DRAM (Moon et al., arxiv 2106.10499): a ring collective charges each
+    # moved word one link write (sender) + one link read (receiver).
+    # Defaults of 0 keep single-chip objectives and stored-plan identities
+    # for legacy ERTs unchanged (Ert(**json) round-trips).
+    ici_read: float = 0.0
+    ici_write: float = 0.0
 
     def read(self, level: int) -> float:
         return {0: self.dram_read, 1: self.sram_read, 3: self.rf_read}[level]
@@ -69,7 +77,8 @@ EYERISS_LIKE = AcceleratorSpec(
     ert=Ert(dram_read=200.0, dram_write=200.0,
             sram_read=6.1, sram_write=6.8,
             rf_read=1.0, rf_write=1.0, macc=2.2,
-            sram_leak=2.0e-1, rf_leak=4.0e-3),
+            sram_leak=2.0e-1, rf_leak=4.0e-3,
+            ici_read=420.0, ici_write=420.0),   # board-level serdes
     cycle_ns=5.0,  # 200 MHz, 65 nm
 )
 
@@ -79,7 +88,8 @@ GEMMINI_LIKE = AcceleratorSpec(
     ert=Ert(dram_read=130.0, dram_write=130.0,
             sram_read=3.1, sram_write=3.4,
             rf_read=0.12, rf_write=0.12, macc=0.55,
-            sram_leak=1.0e-1, rf_leak=1.0e-3),
+            sram_leak=1.0e-1, rf_leak=1.0e-3,
+            ici_read=280.0, ici_write=280.0),   # board-level serdes
     cycle_ns=1.0,  # 1 GHz, 22 nm
 )
 
@@ -89,7 +99,8 @@ A100_LIKE = AcceleratorSpec(
     ert=Ert(dram_read=32.0, dram_write=32.0,     # HBM2 ~4 pJ/bit
             sram_read=1.1, sram_write=1.2,
             rf_read=0.06, rf_write=0.06, macc=0.12,
-            sram_leak=8.0e-1, rf_leak=2.0e-4),
+            sram_leak=8.0e-1, rf_leak=2.0e-4,
+            ici_read=40.0, ici_write=40.0),     # NVLink ~10 pJ/bit
     cycle_ns=0.7,  # ~1.4 GHz, 7 nm
 )
 
@@ -99,7 +110,8 @@ TPUV1_LIKE = AcceleratorSpec(
     ert=Ert(dram_read=330.0, dram_write=330.0,   # DDR3
             sram_read=2.4, sram_write=2.6,
             rf_read=0.10, rf_write=0.10, macc=0.38,
-            sram_leak=5.0e-1, rf_leak=5.0e-4),
+            sram_leak=5.0e-1, rf_leak=5.0e-4,
+            ici_read=700.0, ici_write=700.0),   # PCIe-gen3-class
     cycle_ns=1.4,  # 700 MHz, 28 nm
 )
 
@@ -115,7 +127,8 @@ TPUV5E_LIKE = AcceleratorSpec(
     num_pe=128 * 128,
     ert=Ert(dram_read=18.0, dram_write=18.0,  # HBM2e-class
             sram_read=0.9, sram_write=1.0,
-            rf_read=0.04, rf_write=0.04, macc=0.08),
+            rf_read=0.04, rf_write=0.04, macc=0.08,
+            ici_read=22.0, ici_write=22.0),   # ICI ~5.5 pJ/bit
     cycle_ns=1.0 / 0.94,                      # 940 MHz
     allow_bypass=False,        # Mosaic always stages through VMEM
     fixed_spatial=(128, 128, 1),

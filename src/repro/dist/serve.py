@@ -1,0 +1,51 @@
+"""Serve a TP-sharded model on a real jax.Mesh.
+
+The deployment-side half of the dist subsystem: ``shard_engine`` places
+an existing ``serving.Engine``'s parameters on a ("data", "model") host
+mesh under the strict rule table (sharding.rules.shard_params), so
+every jitted prefill/decode program lowers with GSPMD collectives —
+actual multi-device execution, not a cost-model abstraction.  On CPU CI
+the mesh comes from ``launch.mesh.make_host_mesh`` over
+XLA_FLAGS-forced host devices.
+
+Token identity: greedy (temperature=0) decoding of the sharded engine
+is gated token-identical to the single-chip oracle (bench_dist /
+scripts/dist_serve_smoke.py).  TP all-reduces reassociate the
+contraction sums, so float *logits* may differ in ulps — argmax over
+well-separated smoke-model logits is the equality that is actually
+deployed, and it must hold exactly.
+
+Imports jax + the serving stack: deliberately NOT re-exported from
+``repro.dist`` (the package root stays core-only so planner.store can
+import dist.mesh_solve without cycles).
+"""
+from __future__ import annotations
+
+import jax
+
+from ..launch.mesh import make_host_mesh
+from ..obs.registry import get_registry
+from ..sharding.rules import shard_params
+
+_REG = get_registry()
+
+
+def shard_engine(engine, *, model_axis: int, data_axis: int = 1,
+                 mode: str = "tp", strict: bool = True):
+    """Re-place ``engine``'s params on a (data_axis, model_axis) host
+    mesh; returns the mesh.  The engine object is updated in place (its
+    jitted programs re-trace against the new shardings on next call —
+    same compiled-program bound as before, one program per signature).
+
+    ``strict=True`` (default) uses the strict rule table: an unmatched
+    parameter path raises instead of silently replicating."""
+    mesh = make_host_mesh(data=data_axis, model=model_axis)
+    engine.params = shard_params(engine.params, mesh, mode=mode,
+                                 strict=strict)
+    _REG.inc("dist.engines_sharded")
+    return mesh
+
+
+def devices_available(n: int) -> bool:
+    """True when at least ``n`` local devices exist (mesh smoke gate)."""
+    return len(jax.devices()) >= n

@@ -40,7 +40,8 @@ from ..obs.registry import get_registry
 from ..obs.tracing import span as _obs_span
 from .manifest import ManifestEntry, ModelMappingManifest
 from .store import (FusedPlanEntry, PlanEntry, PlanKey, PlanStore,
-                    chain_plan_key, plan_key)
+                    ShardedPlanEntry, chain_plan_key, plan_key,
+                    sharded_plan_key)
 
 
 
@@ -171,6 +172,44 @@ def cached_solve_chain(chain: GemmChain, hw: AcceleratorSpec, *,
                       spatial_mode=spatial_mode,
                       allowed_walk01=allowed_walk01)
     store.put_fused(FusedPlanEntry.from_solve(key, res, hw))
+    return res
+
+
+def cached_solve_sharded(gemm: Gemm, hw: AcceleratorSpec, n_chips: int, *,
+                         dtype_bytes: int = 1,
+                         objective: str = "energy",
+                         spatial_mode: str | None = None,
+                         allowed_walk01: tuple[str, ...] | None = None,
+                         store: PlanStore | None = None):
+    """Read-through ``dist.mesh_solve.solve_sharded``: sharded-plan store
+    hit -> no solves; miss -> joint (mesh, tiling) solve and write back
+    under the sharded key.  On a miss each enumerated partition's
+    per-chip solve ALSO flows through ``cached_solve`` against the same
+    store, so one sharded miss leaves every sub-GEMM plan individually
+    cached (the single-chip dispatch path benefits too)."""
+    from ..dist.mesh_solve import ShardedSolveResult, solve_sharded
+    if store is None:
+        return solve_sharded(gemm, hw, n_chips, dtype_bytes=dtype_bytes,
+                             objective=objective, spatial_mode=spatial_mode,
+                             allowed_walk01=allowed_walk01)
+    key = sharded_plan_key(gemm, hw, n_chips, dtype_bytes=dtype_bytes,
+                           objective=objective, spatial_mode=spatial_mode,
+                           allowed_walk01=allowed_walk01)
+    entry = store.get_sharded(key)
+    if entry is not None:
+        get_registry().inc("dist.store_hits")
+        return ShardedSolveResult(mapping=entry.mapping,
+                                  certificate=entry.certificate)
+    get_registry().inc("dist.store_misses")
+
+    def chip_solve(sub, sub_hw, **kw):
+        return cached_solve(sub, sub_hw, store=store, **kw)
+
+    res = solve_sharded(gemm, hw, n_chips, dtype_bytes=dtype_bytes,
+                        objective=objective, spatial_mode=spatial_mode,
+                        allowed_walk01=allowed_walk01,
+                        chip_solve=chip_solve)
+    store.put_sharded(ShardedPlanEntry.from_solve(key, res, hw))
     return res
 
 
@@ -436,6 +475,34 @@ def prewarm_fused_plans(chains: Iterable[tuple[int, int, int, int]],
     tpu_mapping.set_plan_store(store)
     for (M, FF, K, N2) in chains:
         tpu_mapping.plan_fused_mlp(M, FF, K, N2, dtype_bytes=dtype_bytes)
+        n += 1
+    return n
+
+
+def prewarm_sharded_plans(shapes: Iterable[tuple[int, int, int]],
+                          store: PlanStore, *, n_chips: int,
+                          dtype_bytes: int = 2) -> int:
+    """Populate the store's sharded section with joint (mesh partition,
+    per-chip tiling) plans for the given logical (M, N, K) shapes on an
+    ``n_chips`` mesh; returns the number of shapes planned.
+
+    Shapes are planned under their *TPU dispatch identity* — the padded
+    GEMM and dtype-rescaled spec of ``tpu_mapping.tpu_problem`` — so the
+    mesh plan describes the same problem the Pallas tiling path solves,
+    and the padded dims (MXU multiples) keep small chip counts divisor-
+    feasible.  Each miss also leaves every enumerated sub-GEMM plan in
+    the store's single-chip section (see ``cached_solve_sharded``)."""
+    from ..core import tpu_mapping
+    n = 0
+    seen: set[tuple[int, int, int]] = set()
+    for (M, N, K) in shapes:
+        gemm, hw, padded = tpu_mapping.tpu_problem(M, N, K,
+                                                   dtype_bytes=dtype_bytes)
+        if padded in seen:
+            continue
+        seen.add(padded)
+        cached_solve_sharded(gemm, hw, n_chips, dtype_bytes=dtype_bytes,
+                             store=store)
         n += 1
     return n
 

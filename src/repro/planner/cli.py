@@ -27,6 +27,7 @@ import sys
 
 from ..core.certificate import verify as verify_certificate
 from ..core.fusion import verify_chain
+from ..dist.mesh_solve import verify_sharded
 from ..core.hardware import TEMPLATES
 from ..core.workloads import (CENTER_MODELS, EDGE_MODELS,
                               arch_decode_gemms, arch_decode_program,
@@ -187,8 +188,10 @@ def cmd_inspect(args) -> int:
     store = _open_store(args)
     entries = list(store.entries())
     fused = list(store.fused_entries())
+    sharded = list(store.sharded_entries())
     print(f"[store] {store.root}: {len(entries)} plans, "
-          f"{len(fused)} fused chain plans")
+          f"{len(fused)} fused chain plans, "
+          f"{len(sharded)} sharded mesh plans")
     by_hw: dict[str, int] = {}
     for e in entries:
         by_hw[e.hw_name] = by_hw.get(e.hw_name, 0) + 1
@@ -209,6 +212,16 @@ def cmd_inspect(args) -> int:
                   f"{e.consumer_dims} [{e.elementwise}] {tag} "
                   f"obj={c.objective:.6g}pJ "
                   f"savings={100 * c.savings:.2f}%")
+        for e in sorted(sharded, key=lambda e: e.gemm_dims):
+            c = e.certificate
+            mesh = (f"x{c.counts[0]}y{c.counts[1]}z{c.counts[2]}"
+                    if c.counts else "infeasible")
+            print(f"  {e.digest[:12]} {e.hw_name:16s} "
+                  f"{str(e.gemm_dims):>24s} chips={e.n_chips} {mesh} "
+                  f"[{c.collectives}] obj={c.objective:.6g}pJ/chip "
+                  f"(chip {c.chip_pj:.4g} + ici {c.collective_pj:.4g}) "
+                  f"saves={100 * c.savings:.2f}% "
+                  f"specs={e.partition_specs}")
     return 0
 
 
@@ -228,12 +241,22 @@ def cmd_verify(args) -> int:
             fused_bad += 1
             print(f"FAIL fused {e.digest[:12]} {e.hw.name} "
                   f"{e.producer_dims}->{e.consumer_dims}")
+    sharded_bad = sharded_total = 0
+    for e in store.sharded_entries():
+        sharded_total += 1
+        if not verify_sharded(e.certificate, e.hw, e.mapping):
+            sharded_bad += 1
+            print(f"FAIL sharded {e.digest[:12]} {e.hw.name} "
+                  f"{e.gemm_dims} chips={e.n_chips}")
     print(f"[verify] {total - bad}/{total} certificates verified"
           + (f", {bad} FAILED" if bad else ""))
     print(f"[verify] {fused_total - fused_bad}/{fused_total} chain "
           f"certificates verified"
           + (f", {fused_bad} FAILED" if fused_bad else ""))
-    return 1 if bad or fused_bad else 0
+    print(f"[verify] {sharded_total - sharded_bad}/{sharded_total} "
+          f"sharded joint certificates verified"
+          + (f", {sharded_bad} FAILED" if sharded_bad else ""))
+    return 1 if bad or fused_bad or sharded_bad else 0
 
 
 def cmd_fsck(args) -> int:

@@ -51,6 +51,7 @@ from ..core.fusion import ChainCertificate, GemmChain
 from ..core.geometry import Gemm, Mapping
 from ..core.hardware import AcceleratorSpec, Ert
 from ..core.solver import SOLVER_VERSION
+from ..dist.mesh_solve import ShardedCertificate
 from ..faults import inject
 from ..obs.registry import get_registry
 from ..obs.tracing import span as _span, trace_event
@@ -67,6 +68,9 @@ SCHEMA_VERSION = 1
 # compatibility-constraint semantics can evolve independently of the
 # single-GEMM plan format.
 CHAIN_SCHEMA_VERSION = 1
+# Sharded (mesh-level) entries likewise: the collective cost model and
+# joint-certificate semantics evolve independently of both formats above.
+SHARDED_SCHEMA_VERSION = 1
 
 # Environment variable consumed by read-through integration points
 # (core/tpu_mapping, serving.Engine): points at a store root directory.
@@ -177,6 +181,50 @@ def chain_plan_key(chain: GemmChain, hw: AcceleratorSpec, *,
                     objective=objective, spatial_mode=spatial_mode,
                     allowed_walk01=tuple(allowed_walk01)
                     if allowed_walk01 is not None else None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedKey:
+    """The semantic identity of one joint (mesh, tiling) solve."""
+
+    gemm_dims: tuple[int, int, int]
+    n_chips: int
+    dtype_bytes: int
+    hw: AcceleratorSpec
+    objective: str = "energy"
+    spatial_mode: str | None = None
+    allowed_walk01: tuple[str, ...] | None = None
+    solver_version: str = SOLVER_VERSION
+
+    def payload(self) -> dict:
+        return {
+            "sharded_schema": SHARDED_SCHEMA_VERSION,
+            "solver_version": self.solver_version,
+            "gemm": list(self.gemm_dims),
+            "n_chips": self.n_chips,
+            "dtype_bytes": self.dtype_bytes,
+            "hw": _hw_identity(self.hw),
+            "objective": self.objective,
+            "spatial_mode": self.spatial_mode,
+            "allowed_walk01": (list(self.allowed_walk01)
+                               if self.allowed_walk01 is not None else None),
+        }
+
+    @property
+    def digest(self) -> str:
+        return _digest_of(self.payload())
+
+
+def sharded_plan_key(gemm: Gemm, hw: AcceleratorSpec, n_chips: int, *,
+                     dtype_bytes: int = 1, objective: str = "energy",
+                     spatial_mode: str | None = None,
+                     allowed_walk01: tuple[str, ...] | None = None
+                     ) -> ShardedKey:
+    return ShardedKey(gemm_dims=gemm.dims, n_chips=n_chips,
+                      dtype_bytes=dtype_bytes, hw=hw, objective=objective,
+                      spatial_mode=spatial_mode,
+                      allowed_walk01=tuple(allowed_walk01)
+                      if allowed_walk01 is not None else None)
 
 
 # ---------------------------------------------------------------------------
@@ -302,6 +350,54 @@ def chain_certificate_from_json(d: dict) -> ChainCertificate:
                               if d.get("consumer_certificate") else None))
 
 
+def sharded_certificate_to_json(c: ShardedCertificate) -> dict:
+    return {
+        "gemm_dims": list(c.gemm_dims),
+        "gemm_name": c.gemm_name,
+        "hw_name": c.hw_name,
+        "n_chips": c.n_chips,
+        "dtype_bytes": c.dtype_bytes,
+        "counts": list(c.counts) if c.counts is not None else None,
+        "collectives": c.collectives,
+        "objective": c.objective,
+        "upper_bound": c.upper_bound,
+        "lower_bound": c.lower_bound,
+        "chip_pj": c.chip_pj,
+        "collective_pj": c.collective_pj,
+        "independent_objective": c.independent_objective,
+        "independent_counts": (list(c.independent_counts)
+                               if c.independent_counts is not None else None),
+        "feasible": c.feasible,
+        "n_solves": c.n_solves,
+        "n_partitions": c.n_partitions,
+        "solve_time_s": c.solve_time_s,
+        "engine": c.engine,
+        "objective_kind": c.objective_kind,
+        "chip_certificate": (certificate_to_json(c.chip_certificate)
+                             if c.chip_certificate else None),
+    }
+
+
+def sharded_certificate_from_json(d: dict) -> ShardedCertificate:
+    return ShardedCertificate(
+        gemm_dims=tuple(d["gemm_dims"]), gemm_name=d["gemm_name"],
+        hw_name=d["hw_name"], n_chips=d["n_chips"],
+        dtype_bytes=d["dtype_bytes"],
+        counts=tuple(d["counts"]) if d["counts"] is not None else None,
+        collectives=d["collectives"], objective=d["objective"],
+        upper_bound=d["upper_bound"], lower_bound=d["lower_bound"],
+        chip_pj=d["chip_pj"], collective_pj=d["collective_pj"],
+        independent_objective=d["independent_objective"],
+        independent_counts=(tuple(d["independent_counts"])
+                            if d["independent_counts"] is not None else None),
+        feasible=d["feasible"], n_solves=d["n_solves"],
+        n_partitions=d["n_partitions"], solve_time_s=d["solve_time_s"],
+        engine=d["engine"],
+        objective_kind=d.get("objective_kind", "energy"),
+        chip_certificate=(certificate_from_json(d["chip_certificate"])
+                          if d.get("chip_certificate") else None))
+
+
 @dataclasses.dataclass(frozen=True)
 class FusedPlanEntry:
     """One stored chain solve: both link mappings plus the zero-gap chain
@@ -366,6 +462,77 @@ class FusedPlanEntry:
                    elementwise=key.elementwise, hw=hw,
                    producer_mapping=result.producer_mapping,
                    consumer_mapping=result.consumer_mapping,
+                   certificate=result.certificate,
+                   created_unix=time.time())
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlanEntry:
+    """One stored joint (mesh partition, per-chip tiling) solve: the
+    mesh factorization, the per-chip ``Mapping`` of the sub-problem, the
+    operand PartitionSpec layouts, and the zero-gap joint certificate.
+    Self-describing like the entry kinds above; lives under
+    ``<root>/sharded/`` so single-chip iteration never sees mesh plans."""
+
+    digest: str
+    gemm_dims: tuple[int, int, int]
+    n_chips: int
+    dtype_bytes: int
+    hw: AcceleratorSpec
+    counts: tuple[int, int, int] | None    # mesh factorization (cx, cy, cz)
+    mapping: Mapping | None                # per-chip mapping of the optimum
+    partition_specs: dict                  # operand -> axis-name tuple
+    certificate: ShardedCertificate
+    created_unix: float
+
+    @property
+    def hw_name(self) -> str:
+        return self.hw.name
+
+    @property
+    def feasible(self) -> bool:
+        return self.certificate.feasible
+
+    def to_json(self) -> dict:
+        return {
+            "sharded_schema": SHARDED_SCHEMA_VERSION,
+            "kind": "sharded",
+            "digest": self.digest,
+            "gemm_dims": list(self.gemm_dims),
+            "n_chips": self.n_chips,
+            "dtype_bytes": self.dtype_bytes,
+            "hw": spec_to_json(self.hw),
+            "counts": list(self.counts) if self.counts is not None else None,
+            "mapping": mapping_to_json(self.mapping),
+            "partition_specs": {op: list(spec) for op, spec
+                                in self.partition_specs.items()},
+            "certificate": sharded_certificate_to_json(self.certificate),
+            "created_unix": self.created_unix,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ShardedPlanEntry":
+        return cls(digest=d["digest"], gemm_dims=tuple(d["gemm_dims"]),
+                   n_chips=d["n_chips"], dtype_bytes=d["dtype_bytes"],
+                   hw=spec_from_json(d["hw"]),
+                   counts=(tuple(d["counts"])
+                           if d["counts"] is not None else None),
+                   mapping=mapping_from_json(d["mapping"]),
+                   partition_specs={op: tuple(spec) for op, spec
+                                    in d["partition_specs"].items()},
+                   certificate=sharded_certificate_from_json(
+                       d["certificate"]),
+                   created_unix=d["created_unix"])
+
+    @classmethod
+    def from_solve(cls, key: ShardedKey, result,
+                   hw: AcceleratorSpec) -> "ShardedPlanEntry":
+        """``result`` is a dist.mesh_solve.ShardedSolveResult."""
+        return cls(digest=key.digest, gemm_dims=key.gemm_dims,
+                   n_chips=key.n_chips, dtype_bytes=key.dtype_bytes, hw=hw,
+                   counts=result.certificate.counts,
+                   mapping=result.mapping,
+                   partition_specs=result.specs or {},
                    certificate=result.certificate,
                    created_unix=time.time())
 
@@ -460,6 +627,7 @@ class PlanStore:
         (self.root / "objects").mkdir(parents=True, exist_ok=True)
         self._mem: dict[str, PlanEntry] = {}
         self._fused_mem: dict[str, FusedPlanEntry] = {}
+        self._sharded_mem: dict[str, ShardedPlanEntry] = {}
         # family_digest -> [digest]; built lazily on the first
         # nearest_neighbor call, maintained by put()
         self._family_index: dict[str, list[str]] | None = None
@@ -613,6 +781,11 @@ class PlanStore:
         digest = key if isinstance(key, str) else key.digest
         return digest in self._mem or self._path(digest).exists()
 
+    def contains_sharded(self, key: "ShardedKey | str") -> bool:
+        digest = key if isinstance(key, str) else key.digest
+        return (digest in self._sharded_mem
+                or self._sharded_path(digest).exists())
+
     def put(self, entry: PlanEntry) -> bool:
         """Persist one solve.  Returns False when the disk write failed
         (counted ``errors.store.write_io``) — the entry still enters the
@@ -687,6 +860,65 @@ class PlanStore:
         return sum(1 for _ in fused.glob("*/*.json")) if fused.exists() \
             else 0
 
+    # -- sharded (mesh-level) entries --------------------------------------
+    def _sharded_path(self, digest: str) -> pathlib.Path:
+        return self.root / "sharded" / digest[:2] / f"{digest}.json"
+
+    def _load_sharded(self, digest: str) -> ShardedPlanEntry | None:
+        entry = self._sharded_mem.get(digest)
+        if entry is not None:
+            return entry
+        path = self._sharded_path(digest)
+        if not path.exists():
+            return None
+        try:
+            entry = ShardedPlanEntry.from_json(self._read_verified(path))
+            if entry.digest != digest:
+                raise CorruptEntry("digest != filename")
+        except OSError:
+            _REG.inc("errors.store.read_io")
+            _REG.inc("degraded.store.cold_resolves")
+            return None
+        except (CorruptEntry, KeyError, TypeError, ValueError) as e:
+            self._quarantine(path, reason=f"{type(e).__name__}: {e}")
+            _REG.inc("degraded.store.cold_resolves")
+            return None
+        self._sharded_mem[digest] = entry
+        return entry
+
+    def get_sharded(self, key: "ShardedKey | str") -> ShardedPlanEntry | None:
+        digest = key if isinstance(key, str) else key.digest
+        with _span("store.get_sharded", digest=digest[:12]) as sp:
+            entry = self._load_sharded(digest)
+            if entry is None:
+                self.misses += 1
+                _REG.inc("plan_store.misses")
+            else:
+                self.hits += 1
+                _REG.inc("plan_store.hits")
+            if sp:
+                sp.attrs["hit"] = entry is not None
+        return entry
+
+    def put_sharded(self, entry: ShardedPlanEntry) -> bool:
+        persisted = self._write_object(self._sharded_path(entry.digest),
+                                       entry.to_json())
+        self._sharded_mem[entry.digest] = entry
+        self.puts += 1
+        _REG.inc("plan_store.puts")
+        return persisted
+
+    def sharded_entries(self) -> Iterator[ShardedPlanEntry]:
+        for path in sorted((self.root / "sharded").glob("*/*.json")):
+            entry = self.get_sharded(path.stem)
+            if entry is not None:
+                yield entry
+
+    def num_sharded(self) -> int:
+        sharded = self.root / "sharded"
+        return sum(1 for _ in sharded.glob("*/*.json")) if sharded.exists() \
+            else 0
+
     # -- inspection --------------------------------------------------------
     def entries(self) -> Iterator[PlanEntry]:
         for path in sorted((self.root / "objects").glob("*/*.json")):
@@ -708,13 +940,15 @@ class PlanStore:
     def stats(self) -> dict:
         return {"root": str(self.root), "entries": len(self),
                 "fused_entries": self.num_fused(),
+                "sharded_entries": self.num_sharded(),
                 "quarantined": self.num_quarantined(),
                 "hits": self.hits, "misses": self.misses, "puts": self.puts}
 
     # -- integrity ---------------------------------------------------------
     def _object_files(self) -> Iterator[tuple[pathlib.Path, type]]:
         for base, loader in ((self.root / "objects", PlanEntry),
-                             (self.root / "fused", FusedPlanEntry)):
+                             (self.root / "fused", FusedPlanEntry),
+                             (self.root / "sharded", ShardedPlanEntry)):
             if not base.exists():
                 continue
             for path in sorted(base.glob("*/*.json")):
@@ -818,8 +1052,10 @@ __all__ = [
     "CHAIN_SCHEMA_VERSION", "ChainKey", "CorruptEntry", "Ert",
     "FusedPlanEntry",
     "PLAN_DB_ENV", "PlanEntry", "PlanKey", "PlanStore",
-    "SCHEMA_VERSION", "certificate_from_json", "certificate_to_json",
+    "SCHEMA_VERSION", "SHARDED_SCHEMA_VERSION", "ShardedKey",
+    "ShardedPlanEntry", "certificate_from_json", "certificate_to_json",
     "chain_certificate_from_json", "chain_certificate_to_json",
     "chain_plan_key", "mapping_from_json", "mapping_to_json", "plan_key",
-    "resolve_default_store",
+    "resolve_default_store", "sharded_certificate_from_json",
+    "sharded_certificate_to_json", "sharded_plan_key",
 ]

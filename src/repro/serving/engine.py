@@ -201,6 +201,44 @@ class Engine:
                              type(e).__name__, e)
         return planned
 
+    def prewarm_sharded_shapes(self, shapes, *, n_chips: int,
+                               dtype_bytes: int | None = None) -> int:
+        """Plan an explicit (M, N, K) shape list through the installed
+        store's *sharded* section: each shape gets a joint (mesh
+        partition, per-chip tiling) plan for an ``n_chips`` mesh (see
+        dist.mesh_solve).  The mesh counterpart of ``prewarm_shapes``;
+        after this, a sharded deployment resolves every partition +
+        tiling decision from cache — zero joint solves in steady state.
+
+        Requires a store (sharded plans are deployment artifacts, not
+        in-process caches): with none installed this is a counted no-op.
+        Best-effort per shape, like ``prewarm_shapes``; failures count
+        under ``dist.prewarm_failures``.  Returns #shapes planned."""
+        from ..planner.batch import prewarm_sharded_plans
+        from ..planner.store import resolve_default_store
+        if dtype_bytes is None:
+            dtype_bytes = self.dispatch_dtype_bytes
+        store = (self.plan_store if self.plan_store is not None
+                 else resolve_default_store())
+        if store is None:
+            _LOG.warning("prewarm_sharded_shapes needs a plan store; "
+                         "skipping (install one via Engine(plan_store=...) "
+                         "or $GOMA_PLAN_DB)")
+            _REG.inc("dist.prewarm_skipped")
+            return 0
+        planned = 0
+        for s in list(shapes):
+            try:
+                planned += prewarm_sharded_plans(
+                    [s], store, n_chips=n_chips, dtype_bytes=dtype_bytes)
+            except Exception as e:
+                _REG.inc("dist.prewarm_failures")
+                _LOG.warning("sharded prewarm failed for GEMM shape %s "
+                             "(%s: %s); it will co-solve at first use", s,
+                             type(e).__name__, e)
+        _REG.inc("dist.prewarmed", planned)
+        return planned
+
     @property
     def dispatch_dtype_bytes(self) -> int:
         """The dtype under which this engine's GEMMs dispatch (plan

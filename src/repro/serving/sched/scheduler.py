@@ -79,6 +79,12 @@ class SchedConfig:
     #                                     decode-step programs;
     #                                     "enumerated": the hand
     #                                     extraction tables (arch_id)
+    mesh_chips: int = 1                 # > 1: this deployment runs on an
+    #                                     n-chip mesh — prewarm also
+    #                                     populates the store's sharded
+    #                                     section with joint (partition,
+    #                                     tiling) plans for every bucketed
+    #                                     GEMM shape (dist.mesh_solve)
     # --- degradation knobs (DESIGN.md §Resilience) ---
     shed_on_full: bool = False          # queue full: return a terminal
     #                                     REJECTED result instead of
@@ -168,6 +174,7 @@ class ContinuousScheduler:
         self._resolved_groups: set[str] = set()
         self.prewarmed_plans = 0
         self.prewarmed_chains = 0
+        self.prewarmed_sharded = 0
         # capture-source prewarm reads everything off the engine's own
         # model, so a plan-store deployment prewarms even without an
         # arch_id; enumerated prewarm needs the arch extraction tables
@@ -254,6 +261,19 @@ class ContinuousScheduler:
                 _REG.inc("sched.prewarm_failures")
                 _LOG.warning("plan prewarm failed for group %r (%s: %s); "
                              "continuing", group, type(e).__name__, e)
+        if self.cfg.mesh_chips > 1 and self.engine.plan_store is not None:
+            # mesh deployment: the same deduped shape union also gets
+            # joint (mesh partition, per-chip tiling) plans in the
+            # store's sharded section — steady state then resolves both
+            # the partition and the per-chip tiling from cache
+            try:
+                self.prewarmed_sharded = self.engine.prewarm_sharded_shapes(
+                    sorted(seen), n_chips=self.cfg.mesh_chips)
+            except Exception as e:
+                _REG.inc("sched.prewarm_failures")
+                _LOG.warning("sharded prewarm failed (%s: %s); partitions "
+                             "will co-solve at first use",
+                             type(e).__name__, e)
         return planned
 
     def _resolve_plans(self, group: str) -> None:

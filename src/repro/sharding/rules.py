@@ -73,7 +73,16 @@ def _flatten_with_paths(tree):
     return out, treedef
 
 
-def spec_for_param(path: str, ndim: int) -> P:
+def spec_for_param(path: str, ndim: int, *, strict: bool = False) -> P:
+    """PartitionSpec for one parameter path by first-matching rule.
+
+    ``strict=False`` (default) keeps the historical lenient behavior: a
+    path matching no rule silently replicates.  ``strict=True`` raises
+    instead — a no-match under strict mode means a new model family
+    added parameters the rule table has never seen, and silently
+    replicating them is exactly the drift ``shard_params`` exists to
+    catch (a replicated 4 GiB expert table "works" until the host
+    OOMs or the TP all-reduce pattern silently changes)."""
     for pat, spec in PARAM_RULES:
         if re.search(pat, path):
             extra = ndim - len(spec)
@@ -82,6 +91,11 @@ def spec_for_param(path: str, ndim: int) -> P:
                 return P()
             # scanned stacks / grouped stacks: leading axes unsharded
             return P(*([None] * extra + list(spec)))
+    if strict:
+        raise ValueError(
+            f"no sharding rule matches parameter {path!r} (ndim={ndim}); "
+            f"add a PARAM_RULES pattern for it or call with strict=False "
+            f"to replicate")
     return P()  # replicate by default
 
 
@@ -142,23 +156,38 @@ def apply_fsdp(spec: P, shape: tuple[int, ...], mesh: Mesh,
     return spec
 
 
-def param_shardings(params, mesh: Mesh, *, mode: str = "fsdp"):
+def param_shardings(params, mesh: Mesh, *, mode: str = "fsdp",
+                    strict: bool = False):
     """Pytree of NamedSharding matching ``params``' structure.
 
     mode="tp": Megatron TP + pure DP replication of params.
     mode="fsdp" (default): TP + params/opt-state sharded over data too.
+    strict=True: raise on any parameter path matching no rule (see
+    ``spec_for_param``) instead of silently replicating it.
     """
     flat, treedef = _flatten_with_paths(params)
     shardings = []
     for path, leaf in flat:
         ndim = leaf.ndim if hasattr(leaf, "ndim") else 0
-        spec = spec_for_param(path, ndim)
+        spec = spec_for_param(path, ndim, strict=strict)
         if hasattr(leaf, "shape"):
             spec = sanitize_spec(spec, leaf.shape, mesh)
             if mode == "fsdp":
                 spec = apply_fsdp(spec, leaf.shape, mesh)
         shardings.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def shard_params(params, mesh: Mesh, *, mode: str = "fsdp",
+                 strict: bool = True):
+    """Place a materialized parameter pytree on ``mesh`` under the rule
+    table.  Strict *by default*: any parameter path that no PARAM_RULES
+    pattern covers raises before a single byte moves, so new-model drift
+    surfaces at deployment time rather than as a silently replicated
+    tensor.  The lenient spec path stays available via strict=False
+    (and via ``param_shardings``, whose default is unchanged)."""
+    return jax.device_put(
+        params, param_shardings(params, mesh, mode=mode, strict=strict))
 
 
 def batch_spec(shape: tuple[int, ...], mesh: Mesh) -> P:

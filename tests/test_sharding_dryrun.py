@@ -140,6 +140,47 @@ def test_model_flops_estimate_kinds():
     assert attn(32, 32768) > 2 * n * 32768 * 32 * 0.5
 
 
+def test_strict_mode_raises_on_unmatched_path():
+    with pytest.raises(ValueError, match="no sharding rule matches"):
+        spec_for_param("unknown/thing", 2, strict=True)
+    # lenient default unchanged
+    assert spec_for_param("unknown/thing", 2) == P()
+
+
+@pytest.mark.parametrize("arch", [
+    "rwkv6-7b", "seamless-m4t-medium", "zamba2-2.7b", "stablelm-1.6b",
+    "llama3-8b", "yi-34b", "gemma2-27b", "deepseek-moe-16b",
+    "granite-moe-1b-a400m", "llava-next-34b"])
+def test_rule_table_covers_every_config_family(arch):
+    """Strict mode must accept every parameter path of all 10 model
+    families — full rule coverage, no silent replication anywhere."""
+    from repro.configs import ARCHS, get_config
+    from repro.models import build_model
+    from repro.sharding.rules import _flatten_with_paths
+
+    assert arch in ARCHS                 # the ids above track the registry
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    flat, _ = _flatten_with_paths(params)
+    assert flat
+    for path, leaf in flat:
+        spec = spec_for_param(path, leaf.ndim, strict=True)  # must not raise
+        assert len(spec) <= leaf.ndim, (path, spec)
+
+
+def test_host_mesh_insufficient_devices_names_flag():
+    from repro.launch.mesh import make_host_mesh
+    n = len(jax.devices())
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        make_host_mesh(data=n, model=2)
+    # default shape stays the historical (n, 1)
+    mesh = make_host_mesh()
+    assert dict(zip(mesh.axis_names, mesh.devices.shape)) == \
+        {"data": n, "model": 1}
+
+
 def test_production_mesh_requires_512_devices():
     """On this 1-device test process the production mesh must refuse —
     proving the dry-run's device-count env is NOT leaking into tests."""
