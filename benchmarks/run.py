@@ -38,6 +38,11 @@ Suites:
              meshes + TP-sharded serving token identity (needs >= 4
              devices, e.g. forced host devices via XLA_FLAGS) ->
              BENCH_dist.json at the root
+  pareto     certified (energy, delay) frontiers: verify_pareto + the
+             energy-optimal endpoint bit-matching the unconstrained
+             solve on every (GEMM, spec) pair, zero-solve latency-SLO
+             serving, and the ERT-calibration held-out regression gate
+             -> BENCH_pareto.json at the root
 """
 from __future__ import annotations
 
@@ -125,6 +130,9 @@ def main() -> None:
     if on("dist"):
         import bench_dist
         guarded("dist", lambda: bench_dist.run(smoke=False))
+    if on("pareto"):
+        import bench_pareto
+        guarded("pareto", lambda: bench_pareto.run(smoke=not args.full))
     if on("roofline"):
         try:
             import bench_roofline

@@ -22,6 +22,7 @@ import dataclasses
 
 from .edp import evaluate
 from .hardware import AcceleratorSpec
+from .pareto import pareto_min
 from .solver import solve
 from .workloads import LlmSpec, prefill_gemms
 
@@ -87,13 +88,14 @@ def sweep(base: AcceleratorSpec, model: LlmSpec, seq: int, *,
 
 
 def pareto_frontier(points: list[DesignPoint]) -> list[DesignPoint]:
-    """Non-dominated set under (area ↓, edp ↓)."""
-    feas = sorted((p for p in points if p.feasible),
-                  key=lambda p: (p.area, p.edp))
-    frontier: list[DesignPoint] = []
-    best_edp = float("inf")
-    for p in feas:
-        if p.edp < best_edp - 1e-18:
-            frontier.append(p)
-            best_edp = p.edp
-    return frontier
+    """Non-dominated set under (area ↓, edp ↓).
+
+    Deterministic tie rule via the shared ``core.pareto.pareto_min``
+    filter: among equal-EDP designs the smaller-area one survives, and
+    exact (area, edp) duplicates collapse onto the lexicographically
+    smallest (num_pe, sram, rf) configuration — independent of input
+    order (the old ``edp < best - 1e-18`` strict test dropped equal-EDP
+    points nondeterministically)."""
+    return pareto_min([p for p in points if p.feasible],
+                      key_a=lambda p: p.area, key_b=lambda p: p.edp,
+                      tie=lambda p: (p.num_pe, p.sram_words, p.rf_words))

@@ -141,3 +141,57 @@ TEMPLATES: dict[str, AcceleratorSpec] = {
 
 EDGE_TEMPLATES = ("eyeriss-like", "gemmini-like")
 CENTER_TEMPLATES = ("a100-like", "tpuv1-like")
+
+
+# --- per-level bandwidths (words/cycle) for the exact latency model --------
+# Deliberately NOT fields of AcceleratorSpec/Ert: the planner's
+# content-addressed plan keys hash the full spec (`_hw_identity`), so
+# adding fields there would silently re-key every stored plan.  Bandwidth
+# enters only the *evaluation* side (core/edp.latency) and the Pareto
+# plan-store section, which keys it explicitly.  Unknown specs (DSE
+# sweeps, tests that synthesize hardware) default to infinite bandwidth,
+# i.e. the historical compute-only delay bound.
+
+@dataclasses.dataclass(frozen=True)
+class Bandwidth:
+    """Sustained words/cycle per memory level (word = 8 bit, as the ERT).
+
+    ``dram`` and ``sram`` are chip-wide shared-port rates; ``rf`` is
+    *per-PE* (each PE owns its regfile ports, so aggregate RF bandwidth
+    scales with the mapping's spatial product).  ``inf`` = never the
+    bottleneck, recovering the compute-only delay lower bound."""
+
+    dram: float = float("inf")
+    sram: float = float("inf")
+    rf: float = float("inf")
+
+    def as_tuple(self) -> tuple[float, float, float]:
+        return (self.dram, self.sram, self.rf)
+
+
+INFINITE_BANDWIDTH = Bandwidth()
+
+# Order-of-magnitude sustained rates (bus bytes/s ÷ clock), same spirit as
+# the ERT constants: absolute values scale the delay term, relative
+# ordering across levels is what the latency model exercises.  Calibration
+# (obs/calibrate.py) refines these per deployment from measured rows.
+BANDWIDTHS: dict[str, Bandwidth] = {
+    # 64-bit LPDDR bus @ 200 MHz core clock
+    "eyeriss-like": Bandwidth(dram=8.0, sram=64.0, rf=2.0),
+    # DDR4-class bus @ 1 GHz
+    "gemmini-like": Bandwidth(dram=16.0, sram=64.0, rf=2.0),
+    # HBM2 ~1.5 TB/s @ 1.4 GHz ~= 1100 B/cycle
+    "a100-like": Bandwidth(dram=1024.0, sram=16384.0, rf=2.0),
+    # DDR3 ~34 GB/s @ 700 MHz ~= 48 B/cycle
+    "tpuv1-like": Bandwidth(dram=48.0, sram=8192.0, rf=2.0),
+    # HBM2e ~820 GB/s @ 940 MHz ~= 870 B/cycle
+    "tpuv5e-like": Bandwidth(dram=896.0, sram=8192.0, rf=4.0),
+}
+
+
+def bandwidth_for(hw: AcceleratorSpec,
+                  overrides: dict[str, Bandwidth] | None = None) -> Bandwidth:
+    """Bandwidth table entry for a spec, by name; infinite when unknown."""
+    if overrides is not None and hw.name in overrides:
+        return overrides[hw.name]
+    return BANDWIDTHS.get(hw.name, INFINITE_BANDWIDTH)

@@ -59,9 +59,12 @@ from ..obs.registry import get_registry
 from ..obs.tracing import get_tracer
 from ..obs.tracing import span as _span
 from .certificate import Certificate, check_constraints
+from .edp import evaluate
 from .energy import analytical_energy
-from .geometry import AXES, Gemm, Mapping, divisor_chains, mapping_space_size
-from .hardware import AcceleratorSpec, Ert
+from .geometry import (AXES, Gemm, Mapping, divisor_chains, divisors,
+                       mapping_space_size)
+from .hardware import AcceleratorSpec, Bandwidth, Ert, bandwidth_for
+from .pareto import ParetoCertificate, ParetoPoint, pareto_min
 
 _REG = get_registry()
 
@@ -436,7 +439,7 @@ def _dfs_triple(st: _SearchState, combo, cx, cy, cz, sx: int, sy: int,
 def _triples_reference(st: _SearchState, combo, cx, cy, cz,
                        spatial_mode: str, hw: AcceleratorSpec,
                        macc: float, leak_cycle: float,
-                       objective: str) -> None:
+                       objective: str, min_pe: int = 1) -> None:
     npe = hw.num_pe
     sx_vals = sorted(cx.by_s)
     sy_vals = sorted(cy.by_s)
@@ -459,6 +462,8 @@ def _triples_reference(st: _SearchState, combo, cx, cy, cz,
                 if sz not in cz.by_s:
                     continue
                 s_prod = prod_xy * sz
+                if s_prod < min_pe:       # epsilon-constraint floor
+                    continue
                 scale = 1.0 if objective == "energy" else 1.0 / s_prod
                 leak_term = leak_cycle / s_prod
                 lb_triple = (cx.min_g_by_s[sx] + cy.min_g_by_s[sy]
@@ -611,7 +616,7 @@ class _TripleGrid:
 
 
 def _make_grid(cx, cy, cz, spatial_mode: str, npe: int, leak_cycle: float,
-               objective: str) -> _TripleGrid:
+               objective: str, min_pe: int = 1) -> _TripleGrid:
     sx = cx.s_vals
     okx = sx <= npe
     equality = spatial_mode in ("equality", "fixed")
@@ -624,6 +629,7 @@ def _make_grid(cx, cy, cz, spatial_mode: str, npe: int, leak_cycle: float,
     if equality:
         pxy = sx[:, None] * sy[None, :]
         ok = (pxy <= npe) & (npe % np.maximum(pxy, 1) == 0)
+        ok &= npe >= min_pe           # s_prod == npe in equality mode
         szv = np.where(ok, npe // np.maximum(pxy, 1), -1)
         zp = np.searchsorted(cz.s_vals, np.maximum(szv, 0))
         zsel = np.clip(zp, 0, cz.s_vals.size - 1)
@@ -635,7 +641,9 @@ def _make_grid(cx, cy, cz, spatial_mode: str, npe: int, leak_cycle: float,
     zax = np.nonzero(cz.s_vals <= npe)[0]
     sz = cz.s_vals[zax]
     sprod = sx[:, None, None] * sy[None, :, None] * sz[None, None, :]
-    vi, vj, vk = np.nonzero(sprod <= npe)      # row-major == visit order
+    # row-major == visit order; min_pe is the Pareto sweep's
+    # epsilon-constraint floor (1 = unconstrained, identical mask)
+    vi, vj, vk = np.nonzero((sprod <= npe) & (sprod >= min_pe))
     sprods = sprod[vi, vj, vk]
     spf = sprods.astype(float)
     return _TripleGrid(
@@ -706,7 +714,8 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
           engine: str | None = None,
           fixed_l1: tuple[int | None, int | None, int | None] | None = None,
           require_res1: tuple[bool, bool, bool] | None = None,
-          budget_s: float | None = None) -> SolveResult:
+          budget_s: float | None = None,
+          min_pe: int | None = None) -> SolveResult:
     """Globally optimal mapping for (gemm, hw) with certificate.
 
     Observability wrapper: counts the call (``solver.calls``) and opens
@@ -725,7 +734,7 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
                           allowed_walk01=allowed_walk01,
                           incumbent=incumbent, engine=engine,
                           fixed_l1=fixed_l1, require_res1=require_res1,
-                          budget_s=budget_s)
+                          budget_s=budget_s, min_pe=min_pe)
         if res.certificate.bounded:
             _REG.inc("degraded.solver.bounded")
         return res
@@ -738,7 +747,7 @@ def solve(gemm: Gemm, hw: AcceleratorSpec, *,
                           allowed_walk01=allowed_walk01,
                           incumbent=incumbent, engine=engine,
                           fixed_l1=fixed_l1, require_res1=require_res1,
-                          budget_s=budget_s)
+                          budget_s=budget_s, min_pe=min_pe)
         cert = res.certificate
         sp.attrs.update(feasible=cert.feasible,
                         solve_time_s=cert.solve_time_s,
@@ -760,7 +769,8 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
                 fixed_l1: tuple[int | None, int | None, int | None]
                 | None = None,
                 require_res1: tuple[bool, bool, bool] | None = None,
-                budget_s: float | None = None) -> SolveResult:
+                budget_s: float | None = None,
+                min_pe: int | None = None) -> SolveResult:
     """Branch-and-bound search body behind ``solve``.
 
     objective: "energy" (paper default) or "edp".
@@ -789,6 +799,14 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
     that normal axis must be SRAM-resident).  Restricts the res1 combo
     set; used by the chain solver so the fused intermediate's footprint
     is charged against capacity.
+    min_pe: spatial-product floor ``num_pe_used >= min_pe`` (None/1 =
+    unconstrained, bit-identical search).  The epsilon-constraint lever
+    of ``solve_pareto``: under "le" it slices the mapping space by the
+    compute-delay level; under "equality"/"fixed" the product is pinned
+    at num_pe, so any ``min_pe <= num_pe`` is vacuous and larger values
+    are infeasible.  Both engines apply the identical triple filter, so
+    the differential bit-identity guarantee extends to constrained
+    solves.
     budget_s: anytime mode — a wall-clock budget after which the search
     stops and returns the best *incumbent* with ``certificate.bounded``
     set and a sound proven gap.  Soundness of the recorded lower bound:
@@ -810,6 +828,7 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
         spatial_mode = "equality" if hw.spatial_equality else "le"
     if hw.fixed_spatial is not None:
         spatial_mode = "fixed"
+    mp = 1 if min_pe is None else int(min_pe)
 
     local_cands: dict[tuple, _AxisCands] = {}
 
@@ -897,12 +916,12 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
         if vectorized:
             if grid is None:
                 grid = _make_grid(cx, cy, cz, spatial_mode, npe,
-                                  leak_cycle, objective)
+                                  leak_cycle, objective, mp)
             _triples_vectorized(st, combo, cx, cy, cz, spatial_mode, hw,
                                 macc, leak_cycle, objective, grid)
         else:
             _triples_reference(st, combo, cx, cy, cz, spatial_mode, hw,
-                               macc, leak_cycle, objective)
+                               macc, leak_cycle, objective, mp)
         if st.expired:
             break
 
@@ -919,13 +938,13 @@ def _solve_impl(gemm: Gemm, hw: AcceleratorSpec, *,
                          spatial_mode=requested_mode,
                          allowed_walk01=allowed_walk01, engine=eng,
                          fixed_l1=fixed_l1, require_res1=require_res1,
-                         budget_s=budget_s)
+                         budget_s=budget_s, min_pe=min_pe)
         if spatial_mode == "equality" and requested_mode is None:
             # eq. 29 infeasible for this (gemm, hw): documented fallback
             return solve(gemm, hw, objective="edp", spatial_mode="le",
                          allowed_walk01=allowed_walk01, engine=eng,
                          fixed_l1=fixed_l1, require_res1=require_res1,
-                         budget_s=budget_s)
+                         budget_s=budget_s, min_pe=min_pe)
         cert = Certificate(gemm=gemm, hw_name=hw.name, mapping=None,
                            objective=np.inf, upper_bound=np.inf,
                            lower_bound=np.inf, nodes_explored=st.nodes,
@@ -977,6 +996,7 @@ class SolveRequest:
     allowed_walk01: tuple[str, ...] | None = None
     incumbent: float | None = None
     budget_s: float | None = None
+    min_pe: int | None = None
 
 
 def _request_identity(r) -> tuple:
@@ -988,7 +1008,7 @@ def _request_identity(r) -> tuple:
     return (r.gemm.dims, r.hw, r.objective, r.spatial_mode,
             r.allowed_walk01, r.incumbent,
             getattr(r, "fixed_l1", None), getattr(r, "require_res1", None),
-            getattr(r, "budget_s", None))
+            getattr(r, "budget_s", None), getattr(r, "min_pe", None))
 
 
 def solve_many(requests, *, engine: str | None = None) -> list[SolveResult]:
@@ -1018,9 +1038,140 @@ def solve_many(requests, *, engine: str | None = None) -> list[SolveResult]:
                             incumbent=r.incumbent, engine=engine,
                             fixed_l1=getattr(r, "fixed_l1", None),
                             require_res1=getattr(r, "require_res1", None),
-                            budget_s=getattr(r, "budget_s", None))
+                            budget_s=getattr(r, "budget_s", None),
+                            min_pe=getattr(r, "min_pe", None))
                 flights[key] = res
             out.append(res)
         if sp:
             sp.attrs["unique"] = len(flights)
         return out
+
+
+# ---------------------------------------------------------------------------
+# certified (energy, delay) Pareto frontiers — the epsilon-constraint sweep
+# ---------------------------------------------------------------------------
+
+def achievable_spatial_levels(gemm: Gemm, npe: int) -> list[int]:
+    """All spatial products dx*dy*dz <= npe with each factor dividing its
+    axis extent — the discrete ``num_pe_used`` values any "le"-mode
+    mapping can realize.  These are the epsilon levels of the Pareto
+    sweep: delay's compute term V/num_pe_used only changes across them."""
+    dx = [d for d in divisors(gemm.dim("x")) if d <= npe]
+    dy = [d for d in divisors(gemm.dim("y")) if d <= npe]
+    dz = [d for d in divisors(gemm.dim("z")) if d <= npe]
+    levels: set[int] = set()
+    for a in dx:
+        for b in dy:
+            ab = a * b
+            if ab > npe:
+                break
+            for c in dz:
+                p = ab * c
+                if p > npe:
+                    break
+                levels.add(p)
+    return sorted(levels)
+
+
+@dataclasses.dataclass
+class ParetoSolveResult:
+    """``solve_pareto`` output: the frontier plus its certificate."""
+
+    points: tuple[ParetoPoint, ...]
+    certificate: ParetoCertificate
+    n_solves: int = 0
+
+
+def solve_pareto(gemm: Gemm, hw: AcceleratorSpec, *,
+                 objective: str = "energy",
+                 spatial_mode: str | None = None,
+                 allowed_walk01: tuple[str, ...] | None = None,
+                 engine: str | None = None,
+                 bw: Bandwidth | None = None,
+                 max_points: int | None = 24) -> ParetoSolveResult:
+    """Certified (energy, delay) Pareto frontier via epsilon-constraint.
+
+    The first solve is the *unchanged* unconstrained ``solve`` call —
+    the frontier's energy-optimal endpoint is bit-identical to what
+    ``cached_solve``/serving already produce (stored plan identities
+    untouched).  Under effective mode "le" the sweep then minimizes the
+    same objective subject to ``num_pe_used >= p`` for each achievable
+    spatial-product level above the incumbent's, each slice a zero-gap
+    ``Certificate``; capacity feasibility is antitone in the floor, so
+    the first infeasible level terminates the walk.  Under
+    "equality"/"fixed" the spatial product is pinned and the frontier
+    is the single energy-optimal point (delay has no free lever).
+
+    The candidate set is filtered to the exact non-dominated frontier
+    under the bandwidth-aware latency model (``core.edp.latency``) with
+    the shared deterministic tie rule.  ``max_points`` caps the number
+    of swept levels (thinned evenly, the largest level always kept);
+    ``levels_total`` vs ``levels_swept`` on the certificate records any
+    thinning — every returned point is still a certified slice optimum
+    and the returned set is still mutually non-dominated.
+    """
+    t0 = time.perf_counter()
+    _REG.inc("solver.pareto.calls")
+    if bw is None:
+        bw = bandwidth_for(hw)
+    with _span("solver.solve_pareto", dims=list(gemm.dims), hw=hw.name):
+        base = solve(gemm, hw, objective=objective,
+                     spatial_mode=spatial_mode,
+                     allowed_walk01=allowed_walk01, engine=engine)
+        n_solves = 1
+        cert0 = base.certificate
+        if not cert0.feasible:
+            pc = ParetoCertificate(
+                gemm=gemm, hw_name=hw.name, objective_kind=objective,
+                spatial_mode=cert0.spatial_mode, bandwidth=bw.as_tuple(),
+                points=(), feasible=False,
+                solve_time_s=time.perf_counter() - t0)
+            return ParetoSolveResult(points=(), certificate=pc,
+                                     n_solves=n_solves)
+        # the base solve may have auto-fallen back (equality infeasible
+        # => edp/le); constrained slices must live in the same family
+        okind, mode = cert0.objective_kind, cert0.spatial_mode
+
+        def mk_point(floor: int | None, res: SolveResult) -> ParetoPoint:
+            rep = evaluate(gemm, res.mapping, hw, bw=bw)
+            return ParetoPoint(min_pe=floor, mapping=res.mapping,
+                               certificate=res.certificate,
+                               energy_pj=rep.energy_pj,
+                               delay_ns=rep.delay_ns, edp=rep.edp,
+                               num_pe_used=rep.num_pe_used)
+
+        candidates = [mk_point(None, base)]
+        levels_total = levels_swept = 0
+        if mode == "le":
+            levels = [p for p in achievable_spatial_levels(gemm, hw.num_pe)
+                      if p > base.mapping.num_pe_used]
+            levels_total = len(levels)
+            if max_points is not None and len(levels) > max_points:
+                sel = np.unique(np.round(np.linspace(
+                    0, len(levels) - 1, max_points)).astype(int))
+                levels = [levels[i] for i in sel]
+            levels_swept = len(levels)
+            cur = base.mapping.num_pe_used
+            for floor in levels:
+                if floor <= cur:
+                    continue   # already realized by a previous slice
+                res = solve(gemm, hw, objective=okind, spatial_mode=mode,
+                            allowed_walk01=allowed_walk01, engine=engine,
+                            min_pe=floor)
+                n_solves += 1
+                if not res.certificate.feasible:
+                    break      # feasibility is antitone in the floor
+                candidates.append(mk_point(floor, res))
+                cur = max(cur, res.mapping.num_pe_used)
+        frontier = tuple(pareto_min(
+            candidates, key_a=lambda q: q.energy_pj,
+            key_b=lambda q: q.delay_ns, tie=lambda q: q.num_pe_used))
+        pc = ParetoCertificate(
+            gemm=gemm, hw_name=hw.name, objective_kind=okind,
+            spatial_mode=mode, bandwidth=bw.as_tuple(), points=frontier,
+            feasible=True, levels_total=levels_total,
+            levels_swept=levels_swept, candidates_seen=len(candidates),
+            solve_time_s=time.perf_counter() - t0)
+        _REG.inc("solver.pareto.points", len(frontier))
+        return ParetoSolveResult(points=frontier, certificate=pc,
+                                 n_solves=n_solves)

@@ -23,21 +23,23 @@ from .batch import (BatchPlanner, BatchReport,
                     bucketed_serving_fused_chain_groups,
                     bucketed_serving_plan_shape_groups,
                     bucketed_serving_plan_shapes, cached_solve,
-                    cached_solve_chain, flatten_shape_groups,
-                    prewarm_fused_plans, prewarm_tpu_plans,
+                    cached_solve_chain, cached_solve_pareto,
+                    flatten_shape_groups, prewarm_fused_plans,
+                    prewarm_pareto_plans, prewarm_tpu_plans,
                     serving_plan_shapes, tile_plan_from_store)
 from .manifest import ManifestEntry, ModelMappingManifest
-from .store import (ChainKey, FusedPlanEntry, PlanEntry, PlanKey, PlanStore,
-                    chain_plan_key, plan_key, resolve_default_store)
+from .store import (ChainKey, FusedPlanEntry, ParetoKey, ParetoPlanEntry,
+                    PlanEntry, PlanKey, PlanStore, chain_plan_key,
+                    pareto_plan_key, plan_key, resolve_default_store)
 
 __all__ = [
     "BatchPlanner", "BatchReport", "ChainKey", "FusedPlanEntry",
-    "ManifestEntry", "ModelMappingManifest",
+    "ManifestEntry", "ModelMappingManifest", "ParetoKey", "ParetoPlanEntry",
     "PlanEntry", "PlanKey", "PlanStore",
     "bucketed_serving_fused_chain_groups",
     "bucketed_serving_plan_shape_groups", "bucketed_serving_plan_shapes",
-    "cached_solve", "cached_solve_chain", "chain_plan_key",
-    "flatten_shape_groups", "plan_key", "prewarm_fused_plans",
-    "prewarm_tpu_plans", "resolve_default_store", "serving_plan_shapes",
-    "tile_plan_from_store",
+    "cached_solve", "cached_solve_chain", "cached_solve_pareto",
+    "chain_plan_key", "flatten_shape_groups", "pareto_plan_key", "plan_key",
+    "prewarm_fused_plans", "prewarm_pareto_plans", "prewarm_tpu_plans",
+    "resolve_default_store", "serving_plan_shapes", "tile_plan_from_store",
 ]

@@ -39,9 +39,9 @@ from ..core.workloads import LlmSpec, scenario_gemms
 from ..obs.registry import get_registry
 from ..obs.tracing import span as _obs_span
 from .manifest import ManifestEntry, ModelMappingManifest
-from .store import (FusedPlanEntry, PlanEntry, PlanKey, PlanStore,
-                    ShardedPlanEntry, chain_plan_key, plan_key,
-                    sharded_plan_key)
+from .store import (FusedPlanEntry, ParetoPlanEntry, PlanEntry, PlanKey,
+                    PlanStore, ShardedPlanEntry, chain_plan_key,
+                    pareto_plan_key, plan_key, sharded_plan_key)
 
 
 
@@ -210,6 +210,42 @@ def cached_solve_sharded(gemm: Gemm, hw: AcceleratorSpec, n_chips: int, *,
                         allowed_walk01=allowed_walk01,
                         chip_solve=chip_solve)
     store.put_sharded(ShardedPlanEntry.from_solve(key, res, hw))
+    return res
+
+
+def cached_solve_pareto(gemm: Gemm, hw: AcceleratorSpec, *,
+                        objective: str = "energy",
+                        spatial_mode: str | None = None,
+                        allowed_walk01: tuple[str, ...] | None = None,
+                        bw=None, max_points: int | None = 24,
+                        store: PlanStore | None = None):
+    """Read-through ``core.solver.solve_pareto``: pareto-section store
+    hit -> zero solves (the whole certified frontier rehydrates); miss ->
+    epsilon-constraint sweep and write back under the bandwidth-keyed
+    frontier key.  Because the key embeds the (dram, sram, rf) bandwidth
+    triple, recalibrating the latency model re-keys frontiers instead of
+    silently serving stale delay numbers."""
+    from ..core.solver import ParetoSolveResult, solve_pareto
+    if store is None:
+        return solve_pareto(gemm, hw, objective=objective,
+                            spatial_mode=spatial_mode,
+                            allowed_walk01=allowed_walk01, bw=bw,
+                            max_points=max_points)
+    key = pareto_plan_key(gemm, hw, bw=bw, objective=objective,
+                          spatial_mode=spatial_mode,
+                          allowed_walk01=allowed_walk01,
+                          max_points=max_points)
+    entry = store.get_pareto(key)
+    if entry is not None:
+        get_registry().inc("pareto.store_hits")
+        return ParetoSolveResult(points=entry.certificate.points,
+                                 certificate=entry.certificate)
+    get_registry().inc("pareto.store_misses")
+    res = solve_pareto(gemm, hw, objective=objective,
+                       spatial_mode=spatial_mode,
+                       allowed_walk01=allowed_walk01, bw=bw,
+                       max_points=max_points)
+    store.put_pareto(ParetoPlanEntry.from_solve(key, res, hw))
     return res
 
 
@@ -503,6 +539,31 @@ def prewarm_sharded_plans(shapes: Iterable[tuple[int, int, int]],
         seen.add(padded)
         cached_solve_sharded(gemm, hw, n_chips, dtype_bytes=dtype_bytes,
                              store=store)
+        n += 1
+    return n
+
+
+def prewarm_pareto_plans(shapes: Iterable[tuple[int, int, int]],
+                         store: PlanStore, *, dtype_bytes: int = 2,
+                         max_points: int | None = 24) -> int:
+    """Populate the store's pareto section with certified (energy, delay)
+    frontiers for the given logical (M, N, K) shapes under their TPU
+    dispatch identity (padded GEMM + dtype-rescaled spec, matching
+    ``prewarm_sharded_plans``); returns the number of shapes planned.
+
+    This is what a latency-SLO serving deployment runs ahead of traffic:
+    steady-state frontier-point selection then never invokes the solver
+    (``cached_solve_pareto`` hits rehydrate the whole frontier)."""
+    from ..core import tpu_mapping
+    n = 0
+    seen: set[tuple[int, int, int]] = set()
+    for (M, N, K) in shapes:
+        gemm, hw, padded = tpu_mapping.tpu_problem(M, N, K,
+                                                   dtype_bytes=dtype_bytes)
+        if padded in seen:
+            continue
+        seen.add(padded)
+        cached_solve_pareto(gemm, hw, store=store, max_points=max_points)
         n += 1
     return n
 

@@ -19,6 +19,20 @@
 
     PYTHONPATH=src python -m repro.plan inspect --store /tmp/plans
     PYTHONPATH=src python -m repro.plan verify --store /tmp/plans
+
+    # certified (energy, delay) Pareto frontiers: build a sweep into
+    # <store>/pareto/, list it, and independently re-verify every point
+    PYTHONPATH=src python -m repro.plan pareto build --hw eyeriss-like \
+        --shapes 64x96x128,256x256x512 --spatial-mode le \
+        --store /tmp/plans
+    PYTHONPATH=src python -m repro.plan pareto verify --store /tmp/plans
+
+    # fit the latency model's bandwidth table against recorded fidelity
+    # rows (exit 1 if calibration does not beat the compute-only model
+    # on the held-out split)
+    PYTHONPATH=src python -m repro.plan calibrate \
+        --rows /tmp/plans/fidelity/llama-3.2-1b.jsonl \
+        --spec tpuv5e-like --save --store /tmp/plans
 """
 from __future__ import annotations
 
@@ -27,6 +41,7 @@ import sys
 
 from ..core.certificate import verify as verify_certificate
 from ..core.fusion import verify_chain
+from ..core.pareto import select_frontier_point, verify_pareto
 from ..dist.mesh_solve import verify_sharded
 from ..core.hardware import TEMPLATES
 from ..core.workloads import (CENTER_MODELS, EDGE_MODELS,
@@ -189,9 +204,11 @@ def cmd_inspect(args) -> int:
     entries = list(store.entries())
     fused = list(store.fused_entries())
     sharded = list(store.sharded_entries())
+    n_pareto = store.num_pareto()
     print(f"[store] {store.root}: {len(entries)} plans, "
           f"{len(fused)} fused chain plans, "
-          f"{len(sharded)} sharded mesh plans")
+          f"{len(sharded)} sharded mesh plans, "
+          f"{n_pareto} pareto frontiers")
     by_hw: dict[str, int] = {}
     for e in entries:
         by_hw[e.hw_name] = by_hw.get(e.hw_name, 0) + 1
@@ -248,6 +265,13 @@ def cmd_verify(args) -> int:
             sharded_bad += 1
             print(f"FAIL sharded {e.digest[:12]} {e.hw.name} "
                   f"{e.gemm_dims} chips={e.n_chips}")
+    pareto_bad = pareto_total = 0
+    for e in store.pareto_entries():
+        pareto_total += 1
+        if not verify_pareto(e.certificate, e.hw):
+            pareto_bad += 1
+            print(f"FAIL pareto {e.digest[:12]} {e.hw.name} "
+                  f"{e.gemm_dims}")
     print(f"[verify] {total - bad}/{total} certificates verified"
           + (f", {bad} FAILED" if bad else ""))
     print(f"[verify] {fused_total - fused_bad}/{fused_total} chain "
@@ -256,7 +280,10 @@ def cmd_verify(args) -> int:
     print(f"[verify] {sharded_total - sharded_bad}/{sharded_total} "
           f"sharded joint certificates verified"
           + (f", {sharded_bad} FAILED" if sharded_bad else ""))
-    return 1 if bad or fused_bad or sharded_bad else 0
+    print(f"[verify] {pareto_total - pareto_bad}/{pareto_total} "
+          f"pareto frontiers verified"
+          + (f", {pareto_bad} FAILED" if pareto_bad else ""))
+    return 1 if bad or fused_bad or sharded_bad or pareto_bad else 0
 
 
 def cmd_fsck(args) -> int:
@@ -393,6 +420,112 @@ def cmd_fidelity(args) -> int:
     return 0 if rep.passes() else 1
 
 
+def _shapes(s: str) -> list[tuple[int, int, int]]:
+    """Parse '64x96x128,256x256x512' into dim triples."""
+    out = []
+    for part in s.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        dims = tuple(int(x) for x in part.split("x"))
+        if len(dims) != 3:
+            raise ValueError(f"bad shape {part!r} (want MxNxK)")
+        out.append(dims)
+    return out
+
+
+def cmd_pareto(args) -> int:
+    """Certified (energy, delay) frontiers: build / inspect / verify."""
+    from ..core.geometry import Gemm
+    from .batch import cached_solve_pareto
+
+    store = _open_store(args)
+    if args.action == "build":
+        hw = TEMPLATES[args.hw]
+        shapes = _shapes(args.shapes) if args.shapes else []
+        if args.model:
+            from ..core.workloads import prefill_gemms
+            for seq in _ints(args.seqs):
+                for _, g, _ in prefill_gemms(MODELS[args.model], seq):
+                    if g.dims not in shapes:
+                        shapes.append(g.dims)
+        if not shapes:
+            sys.exit("error: pass --shapes and/or --model")
+        for dims in shapes:
+            res = cached_solve_pareto(
+                Gemm(*dims), hw, spatial_mode=args.spatial_mode,
+                max_points=args.max_points, store=store)
+            pc = res.certificate
+            pts = pc.points
+            if not pts:
+                print(f"  {str(dims):>22s}: INFEASIBLE")
+                continue
+            line = (f"  {str(dims):>22s}: {len(pts)} points "
+                    f"E=[{pts[0].energy_pj:.4g}..{pts[-1].energy_pj:.4g}]pJ "
+                    f"T=[{pts[-1].delay_ns:.4g}..{pts[0].delay_ns:.4g}]ns "
+                    f"(solves={res.n_solves}, levels "
+                    f"{pc.levels_swept}/{pc.levels_total})")
+            if args.slo_ns is not None:
+                p = select_frontier_point(pts, args.slo_ns)
+                line += (f" slo->pe={p.num_pe_used} "
+                         f"T={p.delay_ns:.4g}ns" if p else " slo->none")
+            print(line)
+        print(f"[store] {store.stats()}")
+        return 0
+    if args.action == "inspect":
+        n = 0
+        for e in store.pareto_entries():
+            n += 1
+            pc = e.certificate
+            pts = pc.points
+            rng = (f"E=[{pts[0].energy_pj:.4g}..{pts[-1].energy_pj:.4g}]pJ "
+                   f"T=[{pts[-1].delay_ns:.4g}..{pts[0].delay_ns:.4g}]ns"
+                   if pts else "infeasible")
+            print(f"  {e.digest[:12]} {e.hw_name:16s} "
+                  f"{str(e.gemm_dims):>22s} {pc.spatial_mode:8s} "
+                  f"bw={e.bandwidth} {len(pts)} points {rng}")
+        print(f"[pareto] {n} frontiers in {store.root}")
+        return 0
+    # verify
+    bad = total = 0
+    for e in store.pareto_entries():
+        total += 1
+        if not verify_pareto(e.certificate, e.hw):
+            bad += 1
+            print(f"FAIL pareto {e.digest[:12]} {e.hw.name} {e.gemm_dims}")
+    print(f"[verify] {total - bad}/{total} pareto frontiers verified"
+          + (f", {bad} FAILED" if bad else ""))
+    return 1 if bad else 0
+
+
+def cmd_calibrate(args) -> int:
+    """Fit the latency model's bandwidth table against fidelity rows;
+    exit 1 when the held-out regression gate fails."""
+    import os
+
+    from ..obs.calibrate import fit_jsonl, save_calibration
+
+    rows_path = args.rows
+    if rows_path is None:
+        root = args.store or os.environ.get(PLAN_DB_ENV, "").strip()
+        if not root or not args.name:
+            sys.exit("error: pass --rows, or --store/--name to locate "
+                     "<store>/fidelity/<name>.jsonl")
+        rows_path = f"{root}/fidelity/{args.name}.jsonl"
+    rep = fit_jsonl(rows_path, holdout_every=args.holdout_every)
+    print(f"[calibrate] {rep.summary()}")
+    print(f"[calibrate] held-out |rel err|: calibrated "
+          f"{rep.holdout_err:.4f} vs compute-only "
+          f"{rep.baseline_holdout_err:.4f} "
+          f"({100 * rep.improvement:+.1f}% improvement)")
+    if args.save:
+        store = _open_store(args)
+        path = save_calibration(store.root, args.calibration_name,
+                                args.spec, rep)
+        print(f"[calibrate] saved under {path} (spec={args.spec})")
+    return 0 if rep.passes() else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.plan",
@@ -501,6 +634,51 @@ def main(argv=None) -> int:
     f.add_argument("--verbose", "-v", action="store_true")
     _add_store_arg(f)
     f.set_defaults(fn=cmd_fidelity)
+
+    p = sub.add_parser("pareto", help="certified (energy, delay) "
+                                      "frontiers: build a sweep into "
+                                      "<store>/pareto/, list, or "
+                                      "re-verify every point")
+    p.add_argument("action", choices=("build", "inspect", "verify"))
+    p.add_argument("--hw", default="eyeriss-like", choices=sorted(TEMPLATES))
+    p.add_argument("--shapes", default="",
+                   help="comma-separated MxNxK GEMM shapes")
+    p.add_argument("--model", default=None, choices=sorted(MODELS),
+                   help="also sweep this model's prefill GEMMs")
+    p.add_argument("--seqs", default="1024",
+                   help="prefill sequence lengths for --model")
+    p.add_argument("--spatial-mode", default=None,
+                   choices=("equality", "le"),
+                   help="spatial mode for the sweep ('le' gives real "
+                        "multi-point frontiers)")
+    p.add_argument("--max-points", type=int, default=24,
+                   help="epsilon-level thinning cap per frontier")
+    p.add_argument("--slo-ns", type=float, default=None,
+                   help="also report the frontier point a latency SLO "
+                        "of this many ns would select")
+    _add_store_arg(p)
+    p.set_defaults(fn=cmd_pareto)
+
+    cal = sub.add_parser("calibrate",
+                         help="fit the latency model's bandwidth table "
+                              "against recorded fidelity rows; exit 1 "
+                              "when held-out error does not beat the "
+                              "compute-only baseline")
+    cal.add_argument("--rows", default=None,
+                     help="fidelity JSONL path (default: "
+                          "<store>/fidelity/<name>.jsonl)")
+    cal.add_argument("--name", default=None,
+                     help="fidelity record name under the store")
+    cal.add_argument("--holdout-every", type=int, default=3,
+                     help="hold out every Nth row for the gate")
+    cal.add_argument("--spec", default="tpuv5e-like",
+                     help="spec name the calibration applies to")
+    cal.add_argument("--save", action="store_true",
+                     help="persist under <store>/calibration/")
+    cal.add_argument("--calibration-name", default="calibration",
+                     help="calibration file name (sans .json)")
+    _add_store_arg(cal)
+    cal.set_defaults(fn=cmd_calibrate)
 
     k = sub.add_parser("fsck", help="integrity-scan every store object "
                                     "(parse, checksum, digest); exit 1 "

@@ -49,7 +49,8 @@ except ImportError:          # non-POSIX: advisory locking degrades to no-op
 from ..core.certificate import Certificate
 from ..core.fusion import ChainCertificate, GemmChain
 from ..core.geometry import Gemm, Mapping
-from ..core.hardware import AcceleratorSpec, Ert
+from ..core.hardware import AcceleratorSpec, Bandwidth, Ert
+from ..core.pareto import ParetoCertificate, ParetoPoint
 from ..core.solver import SOLVER_VERSION
 from ..dist.mesh_solve import ShardedCertificate
 from ..faults import inject
@@ -71,6 +72,9 @@ CHAIN_SCHEMA_VERSION = 1
 # Sharded (mesh-level) entries likewise: the collective cost model and
 # joint-certificate semantics evolve independently of both formats above.
 SHARDED_SCHEMA_VERSION = 1
+# Pareto (frontier) entries: the epsilon-constraint sweep and latency
+# model can evolve without re-keying the single-point plan formats.
+PARETO_SCHEMA_VERSION = 1
 
 # Environment variable consumed by read-through integration points
 # (core/tpu_mapping, serving.Engine): points at a store root directory.
@@ -225,6 +229,60 @@ def sharded_plan_key(gemm: Gemm, hw: AcceleratorSpec, n_chips: int, *,
                       spatial_mode=spatial_mode,
                       allowed_walk01=tuple(allowed_walk01)
                       if allowed_walk01 is not None else None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoKey:
+    """The semantic identity of one Pareto-frontier sweep.
+
+    Includes the bandwidth triple (delay prices depend on it — a
+    recalibration re-keys frontiers instead of silently serving stale
+    delay estimates) and the level cap (it bounds which epsilon slices
+    were swept).  Single-point plan identities are untouched: this key
+    addresses only the ``pareto/`` section."""
+
+    gemm_dims: tuple[int, int, int]
+    hw: AcceleratorSpec
+    bandwidth: tuple[float, float, float]
+    objective: str = "energy"
+    spatial_mode: str | None = None
+    allowed_walk01: tuple[str, ...] | None = None
+    max_points: int | None = 24
+    solver_version: str = SOLVER_VERSION
+
+    def payload(self) -> dict:
+        return {
+            "pareto_schema": PARETO_SCHEMA_VERSION,
+            "solver_version": self.solver_version,
+            "gemm": list(self.gemm_dims),
+            "hw": _hw_identity(self.hw),
+            "bandwidth": [_float_to_json(b) for b in self.bandwidth],
+            "objective": self.objective,
+            "spatial_mode": self.spatial_mode,
+            "allowed_walk01": (list(self.allowed_walk01)
+                               if self.allowed_walk01 is not None else None),
+            "max_points": self.max_points,
+        }
+
+    @property
+    def digest(self) -> str:
+        return _digest_of(self.payload())
+
+
+def pareto_plan_key(gemm: Gemm, hw: AcceleratorSpec, *,
+                    bw: Bandwidth | None = None,
+                    objective: str = "energy",
+                    spatial_mode: str | None = None,
+                    allowed_walk01: tuple[str, ...] | None = None,
+                    max_points: int | None = 24) -> ParetoKey:
+    from ..core.hardware import bandwidth_for
+    if bw is None:
+        bw = bandwidth_for(hw)
+    return ParetoKey(gemm_dims=gemm.dims, hw=hw, bandwidth=bw.as_tuple(),
+                     objective=objective, spatial_mode=spatial_mode,
+                     allowed_walk01=tuple(allowed_walk01)
+                     if allowed_walk01 is not None else None,
+                     max_points=max_points)
 
 
 # ---------------------------------------------------------------------------
@@ -396,6 +454,124 @@ def sharded_certificate_from_json(d: dict) -> ShardedCertificate:
         objective_kind=d.get("objective_kind", "energy"),
         chip_certificate=(certificate_from_json(d["chip_certificate"])
                           if d.get("chip_certificate") else None))
+
+
+def _float_to_json(x: float) -> float | str:
+    """Non-finite floats as strings (strict-JSON-safe round-trip)."""
+    import math
+    return x if math.isfinite(x) else repr(x)
+
+
+def _float_from_json(x: float | str) -> float:
+    return float(x)
+
+
+def pareto_point_to_json(p: ParetoPoint) -> dict:
+    return {
+        "min_pe": p.min_pe,
+        "mapping": mapping_to_json(p.mapping),
+        "certificate": certificate_to_json(p.certificate),
+        "energy_pj": p.energy_pj,
+        "delay_ns": p.delay_ns,
+        "edp": p.edp,
+        "num_pe_used": p.num_pe_used,
+    }
+
+
+def pareto_point_from_json(d: dict) -> ParetoPoint:
+    return ParetoPoint(
+        min_pe=d["min_pe"], mapping=mapping_from_json(d["mapping"]),
+        certificate=certificate_from_json(d["certificate"]),
+        energy_pj=d["energy_pj"], delay_ns=d["delay_ns"], edp=d["edp"],
+        num_pe_used=d["num_pe_used"])
+
+
+def pareto_certificate_to_json(c: ParetoCertificate) -> dict:
+    return {
+        "gemm": {"dims": list(c.gemm.dims), "name": c.gemm.name},
+        "hw_name": c.hw_name,
+        "objective_kind": c.objective_kind,
+        "spatial_mode": c.spatial_mode,
+        "bandwidth": [_float_to_json(b) for b in c.bandwidth],
+        "points": [pareto_point_to_json(p) for p in c.points],
+        "feasible": c.feasible,
+        "levels_total": c.levels_total,
+        "levels_swept": c.levels_swept,
+        "candidates_seen": c.candidates_seen,
+        "solve_time_s": c.solve_time_s,
+    }
+
+
+def pareto_certificate_from_json(d: dict) -> ParetoCertificate:
+    g = d["gemm"]
+    return ParetoCertificate(
+        gemm=Gemm(*g["dims"], name=g.get("name", "")),
+        hw_name=d["hw_name"], objective_kind=d["objective_kind"],
+        spatial_mode=d["spatial_mode"],
+        bandwidth=tuple(_float_from_json(b) for b in d["bandwidth"]),
+        points=tuple(pareto_point_from_json(p) for p in d["points"]),
+        feasible=d["feasible"], levels_total=d["levels_total"],
+        levels_swept=d["levels_swept"],
+        candidates_seen=d["candidates_seen"],
+        solve_time_s=d["solve_time_s"])
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoPlanEntry:
+    """One stored frontier sweep: every certified (energy, delay) point
+    with its zero-gap slice certificate.  Self-describing like the entry
+    kinds above; lives under ``<root>/pareto/`` so single-point
+    iteration never sees frontiers."""
+
+    digest: str
+    gemm_dims: tuple[int, int, int]
+    hw: AcceleratorSpec
+    bandwidth: tuple[float, float, float]
+    certificate: ParetoCertificate
+    created_unix: float
+
+    @property
+    def hw_name(self) -> str:
+        return self.hw.name
+
+    @property
+    def feasible(self) -> bool:
+        return self.certificate.feasible
+
+    @property
+    def points(self) -> tuple[ParetoPoint, ...]:
+        return self.certificate.points
+
+    def to_json(self) -> dict:
+        return {
+            "pareto_schema": PARETO_SCHEMA_VERSION,
+            "kind": "pareto",
+            "digest": self.digest,
+            "gemm_dims": list(self.gemm_dims),
+            "hw": spec_to_json(self.hw),
+            "bandwidth": [_float_to_json(b) for b in self.bandwidth],
+            "certificate": pareto_certificate_to_json(self.certificate),
+            "created_unix": self.created_unix,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ParetoPlanEntry":
+        return cls(digest=d["digest"], gemm_dims=tuple(d["gemm_dims"]),
+                   hw=spec_from_json(d["hw"]),
+                   bandwidth=tuple(_float_from_json(b)
+                                   for b in d["bandwidth"]),
+                   certificate=pareto_certificate_from_json(
+                       d["certificate"]),
+                   created_unix=d["created_unix"])
+
+    @classmethod
+    def from_solve(cls, key: ParetoKey, result,
+                   hw: AcceleratorSpec) -> "ParetoPlanEntry":
+        """``result`` is a core.solver.ParetoSolveResult."""
+        return cls(digest=key.digest, gemm_dims=key.gemm_dims, hw=hw,
+                   bandwidth=key.bandwidth,
+                   certificate=result.certificate,
+                   created_unix=time.time())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -628,6 +804,7 @@ class PlanStore:
         self._mem: dict[str, PlanEntry] = {}
         self._fused_mem: dict[str, FusedPlanEntry] = {}
         self._sharded_mem: dict[str, ShardedPlanEntry] = {}
+        self._pareto_mem: dict[str, ParetoPlanEntry] = {}
         # family_digest -> [digest]; built lazily on the first
         # nearest_neighbor call, maintained by put()
         self._family_index: dict[str, list[str]] | None = None
@@ -919,6 +1096,70 @@ class PlanStore:
         return sum(1 for _ in sharded.glob("*/*.json")) if sharded.exists() \
             else 0
 
+    # -- pareto (frontier) entries -----------------------------------------
+    def _pareto_path(self, digest: str) -> pathlib.Path:
+        return self.root / "pareto" / digest[:2] / f"{digest}.json"
+
+    def _load_pareto(self, digest: str) -> ParetoPlanEntry | None:
+        entry = self._pareto_mem.get(digest)
+        if entry is not None:
+            return entry
+        path = self._pareto_path(digest)
+        if not path.exists():
+            return None
+        try:
+            entry = ParetoPlanEntry.from_json(self._read_verified(path))
+            if entry.digest != digest:
+                raise CorruptEntry("digest != filename")
+        except OSError:
+            _REG.inc("errors.store.read_io")
+            _REG.inc("degraded.store.cold_resolves")
+            return None
+        except (CorruptEntry, KeyError, TypeError, ValueError) as e:
+            self._quarantine(path, reason=f"{type(e).__name__}: {e}")
+            _REG.inc("degraded.store.cold_resolves")
+            return None
+        self._pareto_mem[digest] = entry
+        return entry
+
+    def get_pareto(self, key: "ParetoKey | str") -> ParetoPlanEntry | None:
+        digest = key if isinstance(key, str) else key.digest
+        with _span("store.get_pareto", digest=digest[:12]) as sp:
+            entry = self._load_pareto(digest)
+            if entry is None:
+                self.misses += 1
+                _REG.inc("plan_store.misses")
+            else:
+                self.hits += 1
+                _REG.inc("plan_store.hits")
+            if sp:
+                sp.attrs["hit"] = entry is not None
+        return entry
+
+    def put_pareto(self, entry: ParetoPlanEntry) -> bool:
+        persisted = self._write_object(self._pareto_path(entry.digest),
+                                       entry.to_json())
+        self._pareto_mem[entry.digest] = entry
+        self.puts += 1
+        _REG.inc("plan_store.puts")
+        return persisted
+
+    def contains_pareto(self, key: "ParetoKey | str") -> bool:
+        digest = key if isinstance(key, str) else key.digest
+        return (digest in self._pareto_mem
+                or self._pareto_path(digest).exists())
+
+    def pareto_entries(self) -> Iterator[ParetoPlanEntry]:
+        for path in sorted((self.root / "pareto").glob("*/*.json")):
+            entry = self.get_pareto(path.stem)
+            if entry is not None:
+                yield entry
+
+    def num_pareto(self) -> int:
+        pareto = self.root / "pareto"
+        return sum(1 for _ in pareto.glob("*/*.json")) if pareto.exists() \
+            else 0
+
     # -- inspection --------------------------------------------------------
     def entries(self) -> Iterator[PlanEntry]:
         for path in sorted((self.root / "objects").glob("*/*.json")):
@@ -941,6 +1182,7 @@ class PlanStore:
         return {"root": str(self.root), "entries": len(self),
                 "fused_entries": self.num_fused(),
                 "sharded_entries": self.num_sharded(),
+                "pareto_entries": self.num_pareto(),
                 "quarantined": self.num_quarantined(),
                 "hits": self.hits, "misses": self.misses, "puts": self.puts}
 
@@ -948,7 +1190,8 @@ class PlanStore:
     def _object_files(self) -> Iterator[tuple[pathlib.Path, type]]:
         for base, loader in ((self.root / "objects", PlanEntry),
                              (self.root / "fused", FusedPlanEntry),
-                             (self.root / "sharded", ShardedPlanEntry)):
+                             (self.root / "sharded", ShardedPlanEntry),
+                             (self.root / "pareto", ParetoPlanEntry)):
             if not base.exists():
                 continue
             for path in sorted(base.glob("*/*.json")):
@@ -1051,11 +1294,14 @@ def resolve_default_store() -> PlanStore | None:
 __all__ = [
     "CHAIN_SCHEMA_VERSION", "ChainKey", "CorruptEntry", "Ert",
     "FusedPlanEntry",
-    "PLAN_DB_ENV", "PlanEntry", "PlanKey", "PlanStore",
+    "PARETO_SCHEMA_VERSION", "PLAN_DB_ENV", "ParetoKey",
+    "ParetoPlanEntry", "PlanEntry", "PlanKey", "PlanStore",
     "SCHEMA_VERSION", "SHARDED_SCHEMA_VERSION", "ShardedKey",
     "ShardedPlanEntry", "certificate_from_json", "certificate_to_json",
     "chain_certificate_from_json", "chain_certificate_to_json",
-    "chain_plan_key", "mapping_from_json", "mapping_to_json", "plan_key",
+    "chain_plan_key", "mapping_from_json", "mapping_to_json",
+    "pareto_certificate_from_json", "pareto_certificate_to_json",
+    "pareto_plan_key", "plan_key",
     "resolve_default_store", "sharded_certificate_from_json",
     "sharded_certificate_to_json", "sharded_plan_key",
 ]

@@ -239,6 +239,63 @@ class Engine:
         _REG.inc("dist.prewarmed", planned)
         return planned
 
+    def prewarm_pareto_shapes(self, shapes, *,
+                              dtype_bytes: int | None = None,
+                              max_points: int | None = 24) -> int:
+        """Build certified (energy, delay) frontiers for an explicit
+        (M, N, K) shape list into the installed store's pareto section
+        (under the TPU dispatch identity).  The frontier counterpart of
+        ``prewarm_shapes``: after this, latency-SLO point selection
+        (``pareto_frontier`` + ``core.pareto.select_frontier_point``)
+        never invokes the solver.
+
+        Requires a store (frontiers are deployment artifacts): with none
+        installed this is a counted no-op.  Best-effort per shape;
+        failures count under ``sched.prewarm_failures``."""
+        from ..planner.batch import prewarm_pareto_plans
+        from ..planner.store import resolve_default_store
+        if dtype_bytes is None:
+            dtype_bytes = self.dispatch_dtype_bytes
+        store = (self.plan_store if self.plan_store is not None
+                 else resolve_default_store())
+        if store is None:
+            _LOG.warning("prewarm_pareto_shapes needs a plan store; "
+                         "skipping (install one via Engine(plan_store=...) "
+                         "or $GOMA_PLAN_DB)")
+            _REG.inc("pareto.prewarm_skipped")
+            return 0
+        planned = 0
+        for s in list(shapes):
+            try:
+                planned += prewarm_pareto_plans(
+                    [s], store, dtype_bytes=dtype_bytes,
+                    max_points=max_points)
+            except Exception as e:
+                _REG.inc("sched.prewarm_failures")
+                _LOG.warning("pareto prewarm failed for GEMM shape %s "
+                             "(%s: %s); skipping", s, type(e).__name__, e)
+        _REG.inc("pareto.prewarmed", planned)
+        return planned
+
+    def pareto_frontier(self, M: int, N: int, K: int, *,
+                        dtype_bytes: int | None = None,
+                        max_points: int | None = 24):
+        """The certified (energy, delay) frontier of one GEMM under its
+        TPU dispatch identity, read through the installed store
+        (``planner.batch.cached_solve_pareto``); a hit rehydrates the
+        whole frontier with zero solver invocations."""
+        from ..core import tpu_mapping
+        from ..planner.batch import cached_solve_pareto
+        from ..planner.store import resolve_default_store
+        if dtype_bytes is None:
+            dtype_bytes = self.dispatch_dtype_bytes
+        gemm, hw, _ = tpu_mapping.tpu_problem(M, N, K,
+                                              dtype_bytes=dtype_bytes)
+        store = (self.plan_store if self.plan_store is not None
+                 else resolve_default_store())
+        return cached_solve_pareto(gemm, hw, store=store,
+                                   max_points=max_points)
+
     @property
     def dispatch_dtype_bytes(self) -> int:
         """The dtype under which this engine's GEMMs dispatch (plan

@@ -85,6 +85,16 @@ class SchedConfig:
     #                                     section with joint (partition,
     #                                     tiling) plans for every bucketed
     #                                     GEMM shape (dist.mesh_solve)
+    latency_slo_ns: float | None = None  # per-GEMM latency SLO: prewarm
+    #                                     also builds the certified
+    #                                     (energy, delay) frontier of
+    #                                     every bucketed shape and picks
+    #                                     the cheapest point meeting the
+    #                                     SLO (core.pareto.
+    #                                     select_frontier_point) into
+    #                                     ``slo_points``; None keeps the
+    #                                     energy-optimal plan (existing
+    #                                     behavior, byte-for-byte)
     # --- degradation knobs (DESIGN.md §Resilience) ---
     shed_on_full: bool = False          # queue full: return a terminal
     #                                     REJECTED result instead of
@@ -175,6 +185,14 @@ class ContinuousScheduler:
         self.prewarmed_plans = 0
         self.prewarmed_chains = 0
         self.prewarmed_sharded = 0
+        self.prewarmed_pareto = 0
+        # SLO-selected frontier point per bucketed GEMM shape (filled at
+        # prewarm when cfg.latency_slo_ns is set; selection is fixed at
+        # construction, so steady-state traffic never re-solves).  On the
+        # TPU dispatch spec the spatial array is fixed, so the frontier
+        # is single-point and the selected mapping IS the energy-optimal
+        # one — token streams and stored plan identities are unchanged.
+        self.slo_points: dict[tuple[int, int, int], object] = {}
         # capture-source prewarm reads everything off the engine's own
         # model, so a plan-store deployment prewarms even without an
         # arch_id; enumerated prewarm needs the arch extraction tables
@@ -274,6 +292,30 @@ class ContinuousScheduler:
                 _LOG.warning("sharded prewarm failed (%s: %s); partitions "
                              "will co-solve at first use",
                              type(e).__name__, e)
+        if self.cfg.latency_slo_ns is not None:
+            # latency-SLO deployment: build every bucketed shape's
+            # certified (energy, delay) frontier and fix the per-shape
+            # point selection now — steady state then makes zero solver
+            # invocations (frontiers rehydrate from the store's pareto
+            # section).  Best-effort like the rest of prewarm.
+            from ...core.pareto import select_frontier_point
+            if self.engine.plan_store is not None:
+                self.prewarmed_pareto = self.engine.prewarm_pareto_shapes(
+                    sorted(seen))
+            for s in sorted(seen):
+                try:
+                    res = self.engine.pareto_frontier(*s)
+                    p = select_frontier_point(res.points,
+                                              self.cfg.latency_slo_ns)
+                except Exception as e:
+                    _REG.inc("sched.prewarm_failures")
+                    _LOG.warning("frontier selection failed for %s "
+                                 "(%s: %s); energy-optimal plan kept",
+                                 s, type(e).__name__, e)
+                    continue
+                if p is not None:
+                    self.slo_points[s] = p
+            _REG.inc("sched.slo_points", len(self.slo_points))
         return planned
 
     def _resolve_plans(self, group: str) -> None:

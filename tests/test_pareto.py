@@ -1,0 +1,409 @@
+"""Certified (energy, delay) Pareto frontiers: the latency model, the
+deterministic non-dominance filter, the epsilon-constraint sweep, its
+plan-store section, and the ERT calibration gate."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import TEMPLATES, Gemm, Mapping
+from repro.core.edp import evaluate, latency
+from repro.core.hardware import (BANDWIDTHS, Bandwidth, bandwidth_for,
+                                 INFINITE_BANDWIDTH)
+from repro.core.pareto import (ParetoPoint, pareto_min,
+                               select_frontier_point, verify_pareto)
+from repro.core.solver import (achievable_spatial_levels, solve,
+                               solve_pareto, solver_stats)
+from repro.core.timeloop_ref import reference_counts
+from repro.planner.batch import cached_solve_pareto
+from repro.planner.store import (ParetoPlanEntry, PlanStore,
+                                 pareto_certificate_from_json,
+                                 pareto_certificate_to_json,
+                                 pareto_plan_key)
+
+EYE = TEMPLATES["eyeriss-like"]
+GEM = TEMPLATES["gemmini-like"]
+
+
+# ---------------------------------------------------------------------------
+# pareto_min: deterministic non-dominance filter
+# ---------------------------------------------------------------------------
+
+def test_pareto_min_drops_dominated_and_orders():
+    pts = [(3.0, 1.0, "c"), (1.0, 3.0, "a"), (2.0, 2.0, "b"),
+           (2.5, 2.5, "dominated")]
+    out = pareto_min(pts, key_a=lambda p: p[0], key_b=lambda p: p[1])
+    assert [p[2] for p in out] == ["a", "b", "c"]
+    # ascending a, strictly descending b
+    assert [p[0] for p in out] == sorted(p[0] for p in out)
+    assert all(x[1] > y[1] for x, y in zip(out, out[1:]))
+
+
+def test_pareto_min_equal_points_collapse_to_tie_minimal():
+    pts = [(1.0, 1.0, "z"), (1.0, 1.0, "a"), (1.0, 1.0, "m")]
+    for perm in ([0, 1, 2], [2, 1, 0], [1, 2, 0]):
+        out = pareto_min([pts[i] for i in perm], key_a=lambda p: p[0],
+                         key_b=lambda p: p[1], tie=lambda p: p[2])
+        assert [p[2] for p in out] == ["a"]
+
+
+def test_pareto_min_equal_b_keeps_smaller_a():
+    # the codesign tie rule: among equal-EDP designs, smaller area wins
+    pts = [(5.0, 2.0), (3.0, 2.0), (4.0, 2.0)]
+    out = pareto_min(pts, key_a=lambda p: p[0], key_b=lambda p: p[1])
+    assert out == [(3.0, 2.0)]
+
+
+def test_codesign_frontier_tie_determinism():
+    from repro.core.codesign import DesignPoint, pareto_frontier
+    mk = lambda npe, s, r, area, edp: DesignPoint(      # noqa: E731
+        npe, s, r, area, edp, 1.0, True)
+    # two designs with identical (area, edp): the lexicographically
+    # smaller (num_pe, sram, rf) config must survive, whatever the order
+    a = mk(64, 1024, 64, 100.0, 2.0)
+    b = mk(256, 512, 32, 100.0, 2.0)
+    cheaper = mk(32, 256, 16, 50.0, 3.0)
+    for order in ([a, b, cheaper], [b, cheaper, a], [cheaper, a, b]):
+        front = pareto_frontier(order)
+        assert front == [cheaper, a]
+
+
+# ---------------------------------------------------------------------------
+# latency model (tentpole: delay is bytes/bandwidth-aware)
+# ---------------------------------------------------------------------------
+
+def test_latency_matches_reference_counts_by_hand():
+    gemm = Gemm(64, 64, 64)
+    m = Mapping((32, 32, 32), (16, 16, 1), (1, 1, 1), "z", "z")
+    counts = reference_counts(gemm, m, full_reuse=True)
+    bw = bandwidth_for(EYE)
+    assert bw == BANDWIDTHS["eyeriss-like"]
+    lat = latency(gemm, m, EYE)
+    npe = m.num_pe_used
+    assert lat.compute_cycles == gemm.volume / npe
+    assert lat.dram_cycles == (counts.dram_read
+                               + counts.dram_write) / bw.dram
+    assert lat.sram_cycles == (counts.sram_read
+                               + counts.sram_write) / bw.sram
+    assert lat.rf_cycles == (counts.rf_read
+                             + counts.rf_write) / (bw.rf * npe)
+    assert lat.cycles == max(lat.compute_cycles, lat.dram_cycles,
+                             lat.sram_cycles, lat.rf_cycles)
+    assert lat.delay_ns == lat.cycles * EYE.cycle_ns
+    assert lat.bound in ("compute", "dram", "sram", "rf")
+
+
+def test_latency_infinite_bandwidth_recovers_compute_bound():
+    gemm = Gemm(64, 64, 64)
+    m = Mapping((32, 32, 32), (16, 16, 1), (1, 1, 1), "z", "z")
+    unlisted = dataclasses.replace(EYE, name="not-in-the-table")
+    assert bandwidth_for(unlisted) == INFINITE_BANDWIDTH
+    lat = latency(gemm, m, unlisted)
+    assert lat.bound == "compute"
+    assert lat.delay_ns == gemm.volume / m.num_pe_used * EYE.cycle_ns
+    # explicit bw override beats the table
+    lat2 = latency(gemm, m, EYE, bw=Bandwidth())
+    assert lat2.delay_ns == lat.delay_ns
+
+
+def test_bandwidth_kept_out_of_spec_identity():
+    """Bandwidth lives in a name-keyed side table, NOT on the spec:
+    plan-store digests derive from the spec dict and must not re-key."""
+    assert not any(f.name in ("bandwidth", "bw")
+                   for f in dataclasses.fields(EYE))
+    assert bandwidth_for(EYE).dram < float("inf")
+    # DSE sweep names fall back to infinite (compute-only delay)
+    dse = dataclasses.replace(EYE, name="dse_64_65536_64")
+    assert bandwidth_for(dse) == INFINITE_BANDWIDTH
+    # overrides hook (calibration installs through here)
+    ov = {EYE.name: Bandwidth(1.0, 2.0, 3.0)}
+    assert bandwidth_for(EYE, overrides=ov) == Bandwidth(1.0, 2.0, 3.0)
+
+
+def test_evaluate_delay_at_least_compute_bound():
+    gemm = Gemm(64, 96, 128)
+    res = solve(gemm, EYE, spatial_mode="le")
+    rep = evaluate(gemm, res.mapping, EYE)
+    assert rep.delay_ns >= (gemm.volume / res.mapping.num_pe_used
+                            * EYE.cycle_ns)
+    assert rep.edp == pytest.approx(
+        rep.energy_pj * 1e-12 * rep.delay_ns * 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# min_pe constraint (the epsilon slices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["vectorized", "reference"])
+def test_min_pe_respected_and_engines_agree(engine):
+    gemm = Gemm(64, 96, 128)
+    base = solve(gemm, EYE, spatial_mode="le", engine=engine)
+    assert base.mapping.num_pe_used == 128
+    res = solve(gemm, EYE, spatial_mode="le", min_pe=192, engine=engine)
+    assert res.mapping.num_pe_used >= 192
+    assert res.certificate.gap == 0.0
+    # constrained optimum can only cost more
+    assert res.certificate.objective >= base.certificate.objective
+    # both engines must agree bit-for-bit under the constraint
+    other = solve(gemm, EYE, spatial_mode="le", min_pe=192,
+                  engine="reference" if engine == "vectorized"
+                  else "vectorized")
+    assert other.mapping == res.mapping
+    assert other.certificate.objective == res.certificate.objective
+
+
+def test_min_pe_none_and_one_are_unconstrained():
+    gemm = Gemm(48, 80, 112)
+    a = solve(gemm, EYE, spatial_mode="le")
+    b = solve(gemm, EYE, spatial_mode="le", min_pe=None)
+    c = solve(gemm, EYE, spatial_mode="le", min_pe=1)
+    assert a.mapping == b.mapping == c.mapping
+    assert (a.certificate.objective == b.certificate.objective
+            == c.certificate.objective)
+
+
+def test_min_pe_infeasible_floor():
+    res = solve(Gemm(8, 8, 8), EYE, spatial_mode="le", min_pe=10 ** 9)
+    assert res.mapping is None and not res.certificate.feasible
+
+
+def test_achievable_spatial_levels():
+    levels = achievable_spatial_levels(Gemm(4, 6, 1), 12)
+    # products of divisors of (4, 6, 1) capped at 12
+    assert levels == [1, 2, 3, 4, 6, 8, 12]
+    assert achievable_spatial_levels(Gemm(64, 96, 128), EYE.num_pe)[-1] \
+        <= EYE.num_pe
+
+
+# ---------------------------------------------------------------------------
+# solve_pareto (the certified frontier)
+# ---------------------------------------------------------------------------
+
+def test_solve_pareto_endpoint_bit_matches_solve():
+    gemm = Gemm(96, 56, 72)
+    res = solve_pareto(gemm, EYE, spatial_mode="le")
+    base = solve(gemm, EYE, spatial_mode="le")
+    ep = res.certificate.energy_optimal
+    assert ep.mapping == base.mapping
+    assert ep.certificate.objective == base.certificate.objective
+    assert ep.min_pe is None
+
+
+def test_solve_pareto_nondominated_and_verified():
+    gemm = Gemm(96, 56, 72)
+    res = solve_pareto(gemm, EYE, spatial_mode="le")
+    pts = res.certificate.points
+    assert len(pts) >= 2, "expected a real trade-off on this shape"
+    for a, b in zip(pts, pts[1:]):
+        assert b.energy_pj >= a.energy_pj
+        assert b.delay_ns < a.delay_ns
+    for p in pts:
+        assert p.min_pe is None or p.num_pe_used >= p.min_pe
+        assert p.certificate.gap == 0.0
+    assert verify_pareto(res.certificate, EYE)
+    # tampering is caught
+    bad = dataclasses.replace(res.certificate,
+                              points=tuple(
+                                  dataclasses.replace(p, delay_ns=1.0)
+                                  for p in res.certificate.points))
+    assert not verify_pareto(bad, EYE)
+    assert not verify_pareto(res.certificate, GEM)   # wrong spec
+
+
+def test_solve_pareto_equality_mode_single_point():
+    res = solve_pareto(Gemm(64, 64, 64), EYE)   # default mode: equality
+    assert res.certificate.spatial_mode == "equality"
+    assert len(res.certificate.points) == 1
+    assert verify_pareto(res.certificate, EYE)
+
+
+def test_solve_pareto_infeasible():
+    # prime extents cannot tile the 16x16 array exactly: an explicitly
+    # requested equality mode is infeasible, so the frontier is empty
+    # (only a *defaulted* equality falls back to "le")
+    res = solve_pareto(Gemm(7, 7, 7), EYE, spatial_mode="equality")
+    assert not res.certificate.feasible
+    assert res.certificate.points == ()
+    assert res.certificate.energy_optimal is None
+    assert verify_pareto(res.certificate, EYE)
+
+
+def test_solve_pareto_max_points_thinning():
+    gemm = Gemm(96, 56, 72)
+    full = solve_pareto(gemm, EYE, spatial_mode="le", max_points=None)
+    thin = solve_pareto(gemm, EYE, spatial_mode="le", max_points=2)
+    assert thin.certificate.levels_swept <= 2
+    assert thin.certificate.levels_total == full.certificate.levels_total
+    # the energy-optimal endpoint survives thinning bit-for-bit
+    assert (thin.certificate.energy_optimal.mapping
+            == full.certificate.energy_optimal.mapping)
+    assert verify_pareto(thin.certificate, EYE)
+
+
+# ---------------------------------------------------------------------------
+# select_frontier_point
+# ---------------------------------------------------------------------------
+
+def _pt(e, t, npe, floor=None):
+    return ParetoPoint(min_pe=floor, mapping=None, certificate=None,
+                       energy_pj=e, delay_ns=t, edp=e * t, num_pe_used=npe)
+
+
+def test_select_frontier_point_rules():
+    pts = [_pt(1.0, 100.0, 64), _pt(2.0, 50.0, 128), _pt(4.0, 25.0, 256)]
+    assert select_frontier_point(pts, None) is pts[0]       # energy-opt
+    assert select_frontier_point(pts, 60.0) is pts[1]       # cheapest ok
+    assert select_frontier_point(pts, 25.0) is pts[2]       # exactly met
+    assert select_frontier_point(pts, 10.0) is pts[2]       # best effort
+    assert select_frontier_point([], 10.0) is None
+
+
+# ---------------------------------------------------------------------------
+# plan-store pareto section
+# ---------------------------------------------------------------------------
+
+def test_pareto_certificate_json_roundtrip():
+    res = solve_pareto(Gemm(96, 56, 72, "rt"), EYE, spatial_mode="le")
+    c = res.certificate
+    back = pareto_certificate_from_json(pareto_certificate_to_json(c))
+    assert back == c
+    assert verify_pareto(back, EYE)
+
+
+def test_pareto_key_includes_bandwidth():
+    gemm = Gemm(16, 16, 16)
+    k1 = pareto_plan_key(gemm, EYE)
+    k2 = pareto_plan_key(gemm, EYE, bw=Bandwidth(1.0, 2.0, 3.0))
+    assert k1.digest != k2.digest       # recalibration re-keys frontiers
+    # infinite bandwidth (unlisted spec) round-trips through strict JSON
+    k3 = pareto_plan_key(gemm, dataclasses.replace(EYE, name="unlisted"))
+    assert k3.bandwidth == (float("inf"),) * 3
+    assert k3.digest != k1.digest
+
+
+def test_pareto_store_roundtrip_and_fsck(tmp_path):
+    gemm = Gemm(96, 56, 72, "store")
+    store = PlanStore(tmp_path)
+    key = pareto_plan_key(gemm, EYE, spatial_mode="le")
+    assert store.get_pareto(key) is None
+    assert not store.contains_pareto(key)
+
+    res = cached_solve_pareto(gemm, EYE, spatial_mode="le", store=store)
+    assert store.contains_pareto(key)
+    assert store.num_pareto() == 1
+    assert store.stats()["pareto_entries"] == 1
+
+    entry = store.get_pareto(key)
+    assert entry.certificate == res.certificate
+    assert entry.points == res.certificate.points
+    assert entry.feasible
+
+    # cold store object re-reads from disk
+    store2 = PlanStore(tmp_path)
+    entry2 = store2.get_pareto(key)
+    assert entry2.certificate == res.certificate
+    assert verify_pareto(entry2.certificate, EYE)
+    report = store2.fsck()
+    assert report["corrupt"] == [] and report["ok"] == report["checked"]
+
+
+def test_pareto_store_hit_skips_all_solves(tmp_path):
+    gemm = Gemm(64, 96, 128, "hit")
+    store = PlanStore(tmp_path)
+    miss = cached_solve_pareto(gemm, EYE, spatial_mode="le", store=store)
+    assert miss.n_solves >= 1
+    before = solver_stats()["calls"]
+    hit = cached_solve_pareto(gemm, EYE, spatial_mode="le",
+                              store=PlanStore(tmp_path))
+    assert solver_stats()["calls"] == before          # zero solver calls
+    assert hit.n_solves == 0
+    assert hit.certificate == miss.certificate
+
+
+def test_pareto_corrupt_entry_quarantined(tmp_path):
+    gemm = Gemm(64, 96, 128, "corrupt")
+    store = PlanStore(tmp_path)
+    cached_solve_pareto(gemm, EYE, store=store)
+    [path] = list((store.root / "pareto").glob("*/*.json"))
+    path.write_text(path.read_text()[:-40])           # torn write
+    fresh = PlanStore(tmp_path)
+    report = fresh.fsck()
+    assert len(report["corrupt"]) == 1
+    key = pareto_plan_key(gemm, EYE)
+    assert fresh.get_pareto(key) is None              # quarantined
+    assert fresh.num_quarantined() == 1
+    # a re-solve heals the store
+    again = cached_solve_pareto(gemm, EYE, store=fresh)
+    assert again.n_solves >= 1
+    assert PlanStore(tmp_path).fsck()["corrupt"] == []
+
+
+# ---------------------------------------------------------------------------
+# calibration gate
+# ---------------------------------------------------------------------------
+
+def _synthetic_rows(n=18, ns_per_macc=0.002, ns_per_dram_byte=0.05):
+    from repro.obs.fidelity import FidelityRow
+    rows = []
+    for i in range(n):
+        M, N, K = 8 * (i + 1), 16, 32
+        bpl = {"dram": 100.0 * (i + 1) ** 2, "sram": 10.0 * (i + 1),
+               "rf": 5.0}
+        t_ns = ns_per_macc * M * N * K + ns_per_dram_byte * bpl["dram"]
+        rows.append(FidelityRow(
+            plan_key=f"k{i}", manifest_digest=f"m{i}", gemm_type="s",
+            dims=(M, N, K), weight=1, predicted_energy=1.0,
+            predicted_bytes_per_level=bpl, measured_time_s=t_ns * 1e-9))
+    return rows
+
+
+def test_calibration_beats_compute_only_baseline():
+    from repro.obs.calibrate import fit_rows
+    rep = fit_rows(_synthetic_rows())
+    assert rep.passes()
+    assert rep.improvement > 0.5
+    assert rep.model.ns_per_macc == pytest.approx(0.002, rel=1e-3)
+    assert rep.model.ns_per_byte["dram"] == pytest.approx(0.05, rel=1e-3)
+    assert rep.model.ns_per_byte["rf"] >= 0.0
+
+
+def test_calibration_compute_only_data_does_not_regress():
+    """On purely compute-bound data the calibrated model must tie the
+    baseline (gate passes) — calibration never makes delay worse."""
+    from repro.obs.calibrate import fit_rows
+    rep = fit_rows(_synthetic_rows(ns_per_dram_byte=0.0))
+    assert rep.passes()
+    assert rep.holdout_err <= rep.baseline_holdout_err + 1e-12
+
+
+def test_calibration_bandwidth_and_persistence(tmp_path):
+    from repro.obs.calibrate import (calibrated_overrides, fit_rows,
+                                     load_calibration, save_calibration)
+    rep = fit_rows(_synthetic_rows())
+    bw = rep.model.bandwidth(EYE.cycle_ns, dtype_bytes=2)
+    assert bw.dram == pytest.approx(
+        EYE.cycle_ns / (rep.model.ns_per_byte["dram"] * 2), rel=1e-9)
+    assert bw.rf == float("inf")        # rf never the bottleneck here
+    path = save_calibration(tmp_path, "cal", EYE.name, rep)
+    models = load_calibration(path)
+    assert models[EYE.name] == rep.model
+    ov = calibrated_overrides(path,
+                              cycle_ns_by_spec={EYE.name: EYE.cycle_ns})
+    assert bandwidth_for(EYE, overrides=ov) == bw
+    # the override changes delay through the standard evaluate path
+    gemm = Gemm(64, 64, 64)
+    m = Mapping((32, 32, 32), (16, 16, 1), (1, 1, 1), "z", "z")
+    rep_cal = evaluate(gemm, m, EYE, bw=ov[EYE.name])
+    assert rep_cal.delay_ns != evaluate(gemm, m, EYE).delay_ns
+
+
+def test_calibration_needs_enough_rows():
+    from repro.obs.calibrate import fit_rows
+    with pytest.raises(ValueError, match="rows"):
+        fit_rows(_synthetic_rows(n=3))
+
+
+def test_calibration_deterministic():
+    from repro.obs.calibrate import fit_rows
+    a, b = fit_rows(_synthetic_rows()), fit_rows(_synthetic_rows())
+    assert a.model == b.model and a.holdout_err == b.holdout_err

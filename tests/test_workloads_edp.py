@@ -59,10 +59,36 @@ def test_edp_report_and_aggregation():
     m = Mapping((32, 32, 32), (16, 16, 1), (1, 1, 1), "z", "z")
     rep = evaluate(gemm, m, hw)
     assert rep.num_pe_used == 256
-    assert rep.delay_ns == pytest.approx(
-        gemm.volume / 256 * hw.cycle_ns)
+    # roofline delay: at least the compute bound, exactly the max over
+    # the per-level bandwidth terms (checked in detail in test_pareto)
+    assert rep.delay_ns >= gemm.volume / 256 * hw.cycle_ns
     assert rep.edp == pytest.approx(
         rep.energy_pj * 1e-12 * rep.delay_ns * 1e-9)
+    # with no bandwidth table entry the compute-only bound is recovered
+    import dataclasses
+    free = dataclasses.replace(hw, name="unlisted")
+    rep_free = evaluate(gemm, m, free)
+    assert rep_free.delay_ns == pytest.approx(
+        gemm.volume / 256 * hw.cycle_ns)
+
+
+def test_edp_aggregate_sequential_semantics():
+    """Aggregates are self-consistent: edp == E*T under the sequential
+    schedule, the paper's Σ w·EDPᵢ lives under a distinct name, and the
+    old num_pe_used=0 sentinel is gone."""
+    hw = TEMPLATES["eyeriss-like"]
+    gemm = Gemm(64, 64, 64)
+    m = Mapping((32, 32, 32), (16, 16, 1), (1, 1, 1), "z", "z")
+    rep = evaluate(gemm, m, hw)
+    assert not rep.is_aggregate and rep.weighted_edp_sum is None
     agg = EdpReport.aggregate([(rep, 3)])
     assert agg.energy_pj == pytest.approx(3 * rep.energy_pj)
-    assert agg.edp == pytest.approx(3 * rep.edp)
+    assert agg.delay_ns == pytest.approx(3 * rep.delay_ns)
+    # derived, self-consistent: (3E)·(3T) = 9·E·T — not the old Σ w·EDP
+    assert agg.edp == pytest.approx(
+        agg.energy_pj * 1e-12 * agg.delay_ns * 1e-9)
+    assert agg.edp == pytest.approx(9 * rep.edp)
+    # the paper's Table II scalar is preserved under its own name
+    assert agg.weighted_edp_sum == pytest.approx(3 * rep.edp)
+    # sentinel gone: no consumer can divide by a fake PE count
+    assert agg.num_pe_used is None and agg.is_aggregate
