@@ -38,6 +38,11 @@ Suites:
              meshes + TP-sharded serving token identity (needs >= 4
              devices, e.g. forced host devices via XLA_FLAGS) ->
              BENCH_dist.json at the root
+  scaleout   serving scale-out: 4-replica router tokens/s + SLO
+             attainment vs a single replica, KV prefix-cache prefill
+             cut, speculative-decoding speedup, fleet zero-solve
+             certificate -> BENCH_scaleout.json at the root (reduced
+             trace scale unless --full)
   pareto     certified (energy, delay) frontiers: verify_pareto + the
              energy-optimal endpoint bit-matching the unconstrained
              solve on every (GEMM, spec) pair, zero-solve latency-SLO
@@ -127,6 +132,10 @@ def main() -> None:
     if on("resilience"):
         import bench_resilience
         guarded("resilience", lambda: bench_resilience.run())
+    if on("scaleout"):
+        import bench_scaleout
+        guarded("scaleout", lambda: bench_scaleout.run(
+            n_requests=100_000 if args.full else 4000))
     if on("dist"):
         import bench_dist
         guarded("dist", lambda: bench_dist.run(smoke=False))

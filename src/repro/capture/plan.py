@@ -294,3 +294,36 @@ def captured_serving_plan_shape_groups(
     groups["decode"] = capture_model_decode(
         model, slots, cache_len, width=1, slot_indexed=True).shapes()
     return groups
+
+
+def captured_spec_plan_shape_groups(
+        model, *, batch: int, cache_len: int,
+        spec_widths, draft_model=None,
+        draft_cache_len: int | None = None
+        ) -> dict[str, list[tuple[int, int, int]]]:
+    """GEMM shape groups of a speculative-decoding deployment, read off
+    the traced programs themselves: one ``verify{W}`` group per draft
+    window width (a (batch, W) slot-indexed decode — the target model's
+    batched verify step), plus — when a draft *model* proposes the
+    tokens — the drafter's own width-1 decode and teacher-forced
+    catch-up programs.  The spec-decode counterpart of
+    ``captured_serving_plan_shape_groups``: prewarming these groups
+    means neither the verify step nor the draft proposals ever invoke
+    the solver in steady state, and the plan-key count stays bounded by
+    the (small, fixed) width ladder."""
+    groups = {
+        f"verify{w}": capture_model_decode(
+            model, batch, cache_len, width=w, slot_indexed=True).shapes()
+        for w in spec_widths}
+    if draft_model is not None:
+        dlen = draft_cache_len if draft_cache_len is not None \
+            else cache_len
+        groups["draft.decode"] = capture_model_decode(
+            draft_model, 1, dlen, width=1, slot_indexed=True).shapes()
+        for w in spec_widths:
+            # after a rejected draft the drafter re-syncs by decoding
+            # the accepted tokens teacher-forced, one chunk per window
+            # width — same program family as the verify widths
+            groups[f"draft.chunk{w}"] = capture_model_decode(
+                draft_model, 1, dlen, width=w).shapes()
+    return groups

@@ -66,6 +66,10 @@ SITES: dict[str, str] = {
     "traffic.burst":
         "traffic-replay arrival gaps collapse to zero for this request "
         "(a burst), exercising admission control / shedding",
+    "router.replica_down":
+        "one scheduler replica of the serving router dies mid-trace: its "
+        "queued requests fail over to surviving replicas, its in-flight "
+        "slots are evicted as ERRORED (streamed tokens kept)",
 }
 
 

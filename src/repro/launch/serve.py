@@ -64,6 +64,32 @@ def main() -> None:
     ap.add_argument("--watchdog-tick-s", type=float, default=None,
                     help="--continuous: wall-clock budget per scheduler "
                          "tick; slower ticks count sched.watchdog_trips")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="--continuous: scheduler replica count; > 1 "
+                         "routes the trace through the replica router "
+                         "(one shared prewarm pass, least-loaded "
+                         "admission, virtual per-replica clocks)")
+    ap.add_argument("--prefix-cache", type=int, default=None,
+                    metavar="MB",
+                    help="--continuous: enable the KV prefix cache with "
+                         "this byte budget in MiB — shared-prefix "
+                         "admissions graft cached KV rows instead of "
+                         "re-prefilling them (token-identical)")
+    ap.add_argument("--draft-model", default=None, metavar="DRAFTER",
+                    help="--continuous: speculative decoding drafter: "
+                         "'ngram' (prompt-lookup, zero model calls) or "
+                         "an arch name served as a draft model through "
+                         "its own capture-prewarmed engine.  Greedy "
+                         "only; streams stay byte-identical")
+    ap.add_argument("--spec-width", type=int, default=4,
+                    help="--draft-model: verify window width (1 "
+                         "committed + spec-width-1 draft tokens)")
+    ap.add_argument("--ttft-slo-s", type=float, default=None,
+                    help="--continuous: TTFT SLO for the attainment/"
+                         "goodput summary fields")
+    ap.add_argument("--tpot-slo-s", type=float, default=None,
+                    help="--continuous: per-token latency SLO for the "
+                         "attainment/goodput summary fields")
     ap.add_argument("--inject", default=None, metavar="SPECS",
                     help="chaos fault schedule, e.g. "
                          "'store.corrupt:0.01,kernel.nan_row@3' "
@@ -162,16 +188,68 @@ def _serve_continuous(args, cfg, model, params, store) -> None:
                     "counters": reg.snapshot()}
             metrics_fh.write(json.dumps(line, sort_keys=True) + "\n")
 
+    # scale-out options (repro.serving.router)
+    prefix_cache = None
+    if args.prefix_cache is not None:
+        from repro.serving.router import PrefixCache
+        prefix_cache = PrefixCache(wmax,
+                                   max_bytes=args.prefix_cache << 20)
+    drafter = None
+    spec_width = None
+    if args.draft_model is not None:
+        spec_width = args.spec_width
+        if args.draft_model == "ngram":
+            from repro.serving.router import NgramDrafter
+            drafter = NgramDrafter()
+        else:
+            from repro.serving.router import ModelDrafter
+            dcfg = get_config(args.draft_model, smoke=args.smoke)
+            dmodel = build_model(dcfg)
+            dparams = dmodel.init_params(jax.random.PRNGKey(7))
+            drafter = ModelDrafter(Engine(
+                dmodel, dparams, ServeConfig(cache_len=cache_len),
+                plan_store=store))
+    sched_cfg = SchedConfig(slots=args.batch, chunk_widths=widths,
+                            temperature=args.temperature,
+                            prewarm_source=args.prewarm_source,
+                            max_queue=args.max_queue,
+                            shed_on_full=args.max_queue is not None,
+                            default_deadline_s=args.deadline_s,
+                            watchdog_tick_s=args.watchdog_tick_s,
+                            spec_width=spec_width)
+
+    if args.replicas > 1:
+        from repro.serving.router import ReplicaRouter, RouterConfig
+        router = ReplicaRouter(
+            eng, RouterConfig(replicas=args.replicas, sched=sched_cfg,
+                              ttft_slo_s=args.ttft_slo_s,
+                              tpot_slo_s=args.tpot_slo_s),
+            arch_id=args.arch if store is not None else None,
+            prefix_cache=prefix_cache, drafter=drafter)
+        if store is not None:
+            print(f"plan prewarm (fleet, one pass): "
+                  f"{router.prewarmed_plans} GEMM tilings  "
+                  f"store={store.stats()}")
+        results = router.route_trace(trace)
+        summ = router.summary()
+        print(f"{cfg.name} router x{args.replicas}: {len(results)} "
+              f"requests, {summ['total_generated_tokens']} tokens in "
+              f"{summ['makespan_s']:.2f}s makespan "
+              f"({summ['tokens_per_s']:.1f} tok/s incl. compile)")
+        if "slo_attainment" in summ:
+            print(f"  slo attainment: {summ['slo_attainment']:.2%}  "
+                  f"goodput: {summ['goodput_tokens_per_s']:.1f} tok/s")
+        if metrics_fh is not None:
+            metrics_fh.close()
+        return
+
     sched = ContinuousScheduler(
-        eng, SchedConfig(slots=args.batch, chunk_widths=widths,
-                         temperature=args.temperature,
-                         prewarm_source=args.prewarm_source,
-                         max_queue=args.max_queue,
-                         shed_on_full=args.max_queue is not None,
-                         default_deadline_s=args.deadline_s,
-                         watchdog_tick_s=args.watchdog_tick_s),
+        eng, sched_cfg,
         arch_id=args.arch if store is not None else None,
-        clock=clock.now, on_tick=on_tick)
+        clock=clock.now, on_tick=on_tick,
+        prefix_cache=prefix_cache, drafter=drafter)
+    sched.metrics.ttft_slo_s = args.ttft_slo_s
+    sched.metrics.tpot_slo_s = args.tpot_slo_s
     if store is not None:
         print(f"plan prewarm: {sched.prewarmed_plans} GEMM tilings, "
               f"{sched.prewarmed_chains} fused chains  "

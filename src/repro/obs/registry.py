@@ -29,6 +29,25 @@ Conventions used across the repo:
   kernel.{gemm,fused_mlp}.dispatch   Python-level kernel dispatches
                                      (trace-time under jit)
   sched.*                         scheduler ticks / chunks / tokens
+  sched.spec.{rounds,drafted,accepted}   scheduler-side speculative
+                                  verify rounds and acceptance tallies
+  sched.prefix_tokens_reused      prompt tokens grafted from the KV
+                                  prefix cache instead of prefilled
+
+Scale-out namespaces (see ``repro.serving.router`` and DESIGN.md
+§Scale-out):
+
+  router.{routed,failovers}       admissions routed / requests failed
+                                  over from a dead replica
+  router.replica<i>.routed        per-replica admission counts
+  router.replica_downs            replica-death chaos events handled
+  router.static_fallback          routers degraded to Engine.generate
+                                  (unsupported model family)
+  prefix.{hits,misses,inserts,evictions}   KV prefix-cache traffic
+                                  (gauge prefix.bytes = bytes held)
+  spec.{rounds,drafted,accepted,tokens}    static-path speculative
+                                  decoding (spec.draft_steps = draft-
+                                  model forward steps)
 
 Resilience namespaces (see ``repro.faults`` and DESIGN.md §Resilience):
 

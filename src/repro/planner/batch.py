@@ -649,6 +649,45 @@ def bucketed_serving_plan_shape_groups(
     return groups
 
 
+def bucketed_spec_plan_shape_groups(
+        arch_id: str, *, batch: int, spec_widths: Sequence[int],
+        cache_len: int,
+        draft_arch_id: str | None = None
+        ) -> dict[str, list[tuple[int, int, int]]]:
+    """Per-width GEMM shape groups of a speculative-decoding deployment
+    (serving.router.spec), from the hand-enumerated extraction tables:
+    a batched verify step over a draft window of width W flattens to
+    exactly the GEMM set of a batch ``batch * W`` decode step (every
+    projection sees batch*W token rows; attention runs per row against
+    the same static cache), so each ``verify{W}`` group extracts through
+    ``arch_decode_gemms`` like the prefill-chunk groups do.  With a
+    draft model (``draft_arch_id``), its width-1 decode and catch-up
+    chunk programs join the group dict under ``draft.*`` — the
+    enumerated counterpart of
+    ``capture.plan.captured_spec_plan_shape_groups``."""
+    from ..core.workloads import arch_decode_gemms
+
+    def dedup(rows):
+        out, seen = [], set()
+        for _, gemm, _ in rows:
+            if gemm.dims not in seen:
+                seen.add(gemm.dims)
+                out.append(gemm.dims)
+        return out
+
+    groups = {
+        f"verify{w}": dedup(arch_decode_gemms(arch_id, batch=batch * w,
+                                              cache_len=cache_len))
+        for w in spec_widths}
+    if draft_arch_id is not None:
+        groups["draft.decode"] = dedup(arch_decode_gemms(
+            draft_arch_id, batch=1, cache_len=cache_len))
+        for w in spec_widths:
+            groups[f"draft.chunk{w}"] = dedup(arch_decode_gemms(
+                draft_arch_id, batch=w, cache_len=cache_len))
+    return groups
+
+
 def flatten_shape_groups(
         groups: dict[str, list[tuple[int, int, int]]]
         ) -> list[tuple[int, int, int]]:

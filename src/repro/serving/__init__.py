@@ -3,5 +3,7 @@ from .engine import Engine, ServeConfig
 __all__ = ["Engine", "ServeConfig"]
 
 # The continuous-batching scheduler lives in ``repro.serving.sched``
-# (imported lazily by consumers; not re-exported here to keep the
-# static-engine import path free of scheduler dependencies).
+# and the scale-out layer (replica router, KV prefix cache, speculative
+# decoding) in ``repro.serving.router`` (imported lazily by consumers;
+# not re-exported here to keep the static-engine import path free of
+# scheduler dependencies).

@@ -72,6 +72,20 @@ class Engine:
         self._decode = jax.jit(model.decode_step)
         self._insert = jax.jit(_insert_row)
 
+        # speculative-decoding verify: one decode_step over a whole
+        # draft window, greedy-argmaxed *inside* the jit so only (B, W)
+        # token ids and a (B,) finiteness mask cross to the host — never
+        # the (B, W, V) logits (the verify loop is per-token otherwise)
+        def _verify(p, c, t, i):
+            logits, cache = model.decode_step(p, c, t, i)
+            greedy = jnp.argmax(
+                jnp.where(jnp.isfinite(logits), logits, -jnp.inf),
+                axis=-1).astype(jnp.int32)
+            finite = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+            return greedy, finite, cache
+
+        self._verify = jax.jit(_verify)
+
     # ----------------------------------------------------- step-level API
     def new_cache(self, batch: int):
         """Fresh static cache for `batch` rows at cfg.cache_len."""
@@ -88,6 +102,20 @@ class Engine:
         fully independent — inactive slots may carry garbage, their
         writes land below/at their own positions only."""
         return self._decode(self.params, cache, jnp.asarray(tokens),
+                            jnp.asarray(positions, jnp.int32))
+
+    def verify_step(self, cache, tokens, positions):
+        """One speculative-verify step: decode ``tokens`` (B, W) — per
+        row, the committed next token followed by W-1 draft tokens — at
+        per-row write positions (B,), returning ``(greedy, finite,
+        cache)`` where ``greedy`` (B, W) int32 is the target model's
+        greedy continuation after each input token and ``finite`` (B,)
+        flags rows whose logits stayed finite.  Greedy token j equals
+        what width-1 decoding would have produced after consuming input
+        tokens 0..j (chunked decode is bit-identical to sequential
+        steps), so accepting drafts while they match ``greedy`` keeps
+        the emitted stream byte-identical to target-only decoding."""
+        return self._verify(self.params, cache, jnp.asarray(tokens),
                             jnp.asarray(positions, jnp.int32))
 
     def insert_row(self, slot_cache, row_cache, slot: int):
@@ -303,16 +331,21 @@ class Engine:
         return jnp.dtype(self.model.cfg.compute_dtype).itemsize
 
     def validate_capacity(self, prompt_len: int, max_new_tokens: int, *,
-                          prefix_len: int = 0) -> None:
+                          prefix_len: int = 0, lookahead: int = 0) -> None:
         """Fail fast instead of silently overflowing the static cache:
-        every token of prompt + generation needs a cache position."""
-        need = prefix_len + prompt_len + max_new_tokens
+        every token of prompt + generation needs a cache position.
+        ``lookahead`` reserves extra headroom past the last generated
+        token — a speculative verify step writes up to spec_width - 1
+        draft positions beyond the committed frontier, and those writes
+        must land inside the cache even when every draft is rejected."""
+        need = prefix_len + prompt_len + max_new_tokens + lookahead
         if need > self.cfg.cache_len:
             raise ValueError(
                 f"request needs {need} cache positions (prefix "
                 f"{prefix_len} + prompt {prompt_len} + max_new_tokens "
-                f"{max_new_tokens}) but cache_len={self.cfg.cache_len}; "
-                f"shorten the request or raise ServeConfig.cache_len")
+                f"{max_new_tokens} + lookahead {lookahead}) but "
+                f"cache_len={self.cfg.cache_len}; shorten the request "
+                f"or raise ServeConfig.cache_len")
 
     # With a stop token set, the all-rows-done early exit is checked only
     # every this many steps: each check is a device->host sync that

@@ -36,6 +36,13 @@ class ServingMetrics:
     # decode-tick batch efficiency (active rows / slot count)
     started_s: float = 0.0
     finished_s: float = 0.0
+    # latency SLOs (None = not gated): a served request *attains* its
+    # SLO when its TTFT (and, for requests that decoded past the first
+    # token, its per-token latency) is within these bounds.  Goodput
+    # counts only the tokens of SLO-attaining requests — the number a
+    # latency-gated deployment actually gets paid for.
+    ttft_slo_s: float | None = None
+    tpot_slo_s: float | None = None
 
     def record_result(self, res: RequestResult) -> None:
         self.results.append(res)
@@ -63,6 +70,42 @@ class ServingMetrics:
     def tokens_per_s(self) -> float:
         return self.total_generated / self.elapsed_s
 
+    @classmethod
+    def merged(cls, parts: "list[ServingMetrics]", *,
+               elapsed_s: float | None = None,
+               ttft_slo_s: float | None = None,
+               tpot_slo_s: float | None = None) -> "ServingMetrics":
+        """Fleet-level aggregate of per-replica metrics (the router's
+        view): results and tick counters are summed; elapsed defaults to
+        the slowest part (replicas run in parallel, so fleet elapsed is
+        the makespan, not the sum)."""
+        out = cls(ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
+        for m in parts:
+            out.results.extend(m.results)
+            out.steps += m.steps
+            out.decode_steps += m.decode_steps
+            out.prefill_chunks += m.prefill_chunks
+            out.padded_prefill_tokens += m.padded_prefill_tokens
+            out.padded_decode_rows += m.padded_decode_rows
+            out.occupancy_samples.extend(m.occupancy_samples)
+        out.started_s = 0.0
+        out.finished_s = elapsed_s if elapsed_s is not None else \
+            max((m.elapsed_s for m in parts), default=0.0)
+        return out
+
+    def _attains_slo(self, r: RequestResult) -> bool:
+        """Does one *served* request meet the configured latency SLOs?
+        (Callers filter to served requests; a missing SLO bound always
+        passes.)"""
+        if self.ttft_slo_s is not None and \
+                not r.ttft_s <= self.ttft_slo_s:      # NaN fails closed
+            return False
+        if self.tpot_slo_s is not None and r.n_generated > 1:
+            tpot = (r.finish_s - r.first_token_s) / (r.n_generated - 1)
+            if not tpot <= self.tpot_slo_s:
+                return False
+        return True
+
     def summary(self) -> dict:
         # shed requests (rejected/expired, and errored before their
         # first token) carry NaN first_token_s — latency percentiles are
@@ -82,6 +125,25 @@ class ServingMetrics:
         for r in self.results:
             by_reason[r.finish_reason] = by_reason.get(r.finish_reason,
                                                        0) + 1
+        # SLO attainment / goodput over requests that actually started
+        # (shed requests carry NaN first_token_s and are excluded from
+        # the attainment denominator like they are from the percentiles;
+        # they already count against `served`).  No samples -> 0.0, like
+        # the tpot percentiles, so the summary stays NaN-free.
+        started = [r for r in self.results
+                   if r.n_generated > 0 and np.isfinite(r.first_token_s)]
+        attained = [r for r in started if self._attains_slo(r)]
+        slo = {}
+        if self.ttft_slo_s is not None or self.tpot_slo_s is not None:
+            slo = {
+                "ttft_slo_s": self.ttft_slo_s,
+                "tpot_slo_s": self.tpot_slo_s,
+                "slo_attainment": round(
+                    len(attained) / len(started) if started else 0.0, 4),
+                "goodput_tokens_per_s": round(
+                    sum(r.n_generated for r in attained)
+                    / self.elapsed_s, 3),
+            }
         return {
             "requests": len(self.results),
             "served": sum(1 for r in self.results if not r.shed),
@@ -103,4 +165,5 @@ class ServingMetrics:
             "mean_slot_occupancy": round(
                 float(np.mean(self.occupancy_samples))
                 if self.occupancy_samples else 0.0, 4),
+            **slo,
         }

@@ -62,6 +62,29 @@ _LOG = logging.getLogger(__name__)
 SUPPORTED_FAMILIES = ("dense", "moe")
 
 
+def ensure_supported_family(model_cfg) -> None:
+    """Raise a clear ValueError at construction time when a model's
+    family cannot be continuously batched, instead of failing deep in
+    slot grafting.  The router consults this to fall back to the static
+    ``Engine.generate`` path for unsupported families."""
+    fam = model_cfg.family
+    if fam not in SUPPORTED_FAMILIES:
+        raise ValueError(
+            f"continuous batching supports families "
+            f"{SUPPORTED_FAMILIES}, not {fam!r} (recurrent state / "
+            f"frontend prefixes are not slot-graftable)")
+    if fam == "moe" and \
+            getattr(model_cfg, "moe_dispatch", "dense") == "gathered":
+        # gathered dispatch computes expert capacity over the whole
+        # batch: garbage rows in free slots would compete with
+        # active rows for capacity, breaking row independence (and
+        # with it the token-identity-to-oracle guarantee)
+        raise ValueError(
+            "continuous batching requires row-independent compute; "
+            "moe_dispatch='gathered' couples rows through expert "
+            "capacity — use moe_dispatch='dense'")
+
+
 @dataclasses.dataclass
 class SchedConfig:
     slots: int = 8
@@ -108,6 +131,18 @@ class SchedConfig:
     #                                     tick; slower ticks trip
     #                                     sched.watchdog_trips (detection
     #                                     only — the tick still completes)
+    # --- speculative decoding (serving.router.spec) ---
+    spec_width: int | None = None       # with a drafter installed, the
+    #                                     decode phase becomes a batched
+    #                                     verify step over windows of
+    #                                     this width (1 committed token
+    #                                     + spec_width - 1 draft tokens
+    #                                     per row); accepted tokens are
+    #                                     the target model's own greedy
+    #                                     continuations, so streams stay
+    #                                     byte-identical to width-1
+    #                                     decoding.  Requires greedy
+    #                                     sampling (temperature == 0).
 
 
 @dataclasses.dataclass
@@ -128,26 +163,32 @@ class ContinuousScheduler:
                  on_finish: Callable[[RequestResult], None] | None = None,
                  on_tick: Callable[["ContinuousScheduler"], None]
                  | None = None,
-                 clock: Callable[[], float] | None = None):
-        fam = engine.model.cfg.family
-        if fam not in SUPPORTED_FAMILIES:
-            raise ValueError(
-                f"continuous batching supports families "
-                f"{SUPPORTED_FAMILIES}, not {fam!r} (recurrent state / "
-                f"frontend prefixes are not slot-graftable)")
-        if fam == "moe" and \
-                getattr(engine.model.cfg, "moe_dispatch", "dense") \
-                == "gathered":
-            # gathered dispatch computes expert capacity over the whole
-            # batch: garbage rows in free slots would compete with
-            # active rows for capacity, breaking row independence (and
-            # with it the token-identity-to-oracle guarantee)
-            raise ValueError(
-                "continuous batching requires row-independent compute; "
-                "moe_dispatch='gathered' couples rows through expert "
-                "capacity — use moe_dispatch='dense'")
+                 clock: Callable[[], float] | None = None,
+                 prefix_cache=None, drafter=None,
+                 plan_groups: dict | None = None,
+                 chain_groups: dict | None = None):
+        ensure_supported_family(engine.model.cfg)
         self.engine = engine
         self.cfg = cfg
+        # optional KV prefix cache (serving.router.prefix): admission
+        # grafts cached rows for a shared prompt prefix instead of
+        # re-prefilling them
+        self.prefix_cache = prefix_cache
+        # optional speculative-decoding drafter (serving.router.spec)
+        self.drafter = drafter
+        if drafter is not None:
+            if cfg.temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding requires greedy sampling "
+                    "(temperature == 0): acceptance compares drafts "
+                    "against the target's greedy continuation")
+            if cfg.spec_width is None or cfg.spec_width < 2:
+                raise ValueError(
+                    f"a drafter needs spec_width >= 2 (1 committed + "
+                    f">= 1 draft token per window), got "
+                    f"{cfg.spec_width!r}")
+        self._lookahead = (cfg.spec_width - 1) if drafter is not None \
+            else 0
         self.buckets = BucketSpec(cfg.chunk_widths)
         self.slots = SlotManager(cfg.slots)
         self.queue: collections.deque[Request] = collections.deque()
@@ -195,9 +236,17 @@ class ContinuousScheduler:
         self.slo_points: dict[tuple[int, int, int], object] = {}
         # capture-source prewarm reads everything off the engine's own
         # model, so a plan-store deployment prewarms even without an
-        # arch_id; enumerated prewarm needs the arch extraction tables
-        if arch_id is not None or (cfg.prewarm_source == "capture"
-                                   and engine.plan_store is not None):
+        # arch_id; enumerated prewarm needs the arch extraction tables.
+        # A replica constructed with explicit ``plan_groups`` (the
+        # router's shared one-pass prewarm) skips both derivation and
+        # planning: the donor replica already pushed every group through
+        # the store / in-process plan cache, so this replica only needs
+        # the group dict for its per-phase ``_resolve_plans`` calls.
+        if plan_groups is not None:
+            self._plan_groups = dict(plan_groups)
+            self._chain_groups = dict(chain_groups or {})
+        elif arch_id is not None or (cfg.prewarm_source == "capture"
+                                     and engine.plan_store is not None):
             self.prewarmed_plans = self._prewarm(arch_id)
 
     # ------------------------------------------------------------ plan DB
@@ -266,6 +315,23 @@ class ContinuousScheduler:
             _REG.inc("sched.prewarm_failures")
             _LOG.warning("plan-group derivation failed (%s: %s); GEMMs "
                          "will solve at dispatch", type(e).__name__, e)
+        if self.drafter is not None and self.cfg.spec_width is not None:
+            # speculative decoding dispatches the batched verify program
+            # (and, with a model drafter, the draft model's own decode
+            # programs) — same bounded-group treatment as the chunk
+            # widths, same best-effort failure policy
+            try:
+                from ...capture.plan import captured_spec_plan_shape_groups
+                self._plan_groups.update(captured_spec_plan_shape_groups(
+                    self.engine.model, batch=self.cfg.slots,
+                    cache_len=self.engine.cfg.cache_len,
+                    spec_widths=(self.cfg.spec_width,),
+                    draft_model=getattr(self.drafter, "model", None)))
+            except Exception as e:
+                _REG.inc("sched.prewarm_failures")
+                _LOG.warning("spec plan-group derivation failed (%s: %s)"
+                             "; verify GEMMs will solve at dispatch",
+                             type(e).__name__, e)
         planned = 0
         seen: set[tuple[int, int, int]] = set()
         for group, shapes in self._plan_groups.items():
@@ -342,7 +408,8 @@ class ContinuousScheduler:
         ``shed_on_full`` is set — then the request is shed with an
         explicit terminal REJECTED result (returned, recorded, and
         streamed through ``on_finish`` like any other completion)."""
-        self.engine.validate_capacity(req.prompt_len, req.max_new_tokens)
+        self.engine.validate_capacity(req.prompt_len, req.max_new_tokens,
+                                      lookahead=self._lookahead)
         padded = self.buckets.padded_len(req.prompt_len)
         if padded > self.engine.cfg.cache_len:
             raise ValueError(
@@ -461,10 +528,25 @@ class ContinuousScheduler:
             padded_len = self.buckets.padded_len(req.prompt_len)
             buf = np.zeros((1, padded_len), np.int32)
             buf[0, :req.prompt_len] = req.tokens
+            chunks = self.buckets.plan_chunks(req.prompt_len)
+            if self.prefix_cache is not None:
+                # KV prefix reuse: a cached prefix of P tokens (always a
+                # full-chunk boundary, always < prompt_len) is grafted
+                # into the prefill cache and its chunks are skipped —
+                # the remaining chunks read the grafted rows through
+                # attention exactly as if they had just been prefilled
+                # (KV at position i depends only on tokens <= i)
+                hit = self.prefix_cache.lookup(req.tokens)
+                if hit is not None:
+                    p, entry = hit
+                    self._prefill_cache = self.prefix_cache.graft(
+                        self._prefill_cache, entry)
+                    chunks = [c for c in chunks
+                              if c.start + c.width > p]
+                    _REG.inc("sched.prefix_tokens_reused", p)
             self._prefill = _Prefill(
                 slot=slot, cache=self._prefill_cache,
-                chunks=collections.deque(
-                    self.buckets.plan_chunks(req.prompt_len)),
+                chunks=collections.deque(chunks),
                 padded=buf)
             _REG.inc("sched.admitted")
             tr = get_tracer()
@@ -499,7 +581,10 @@ class ContinuousScheduler:
         active = [s for s in self.slots.busy()
                   if self._prefill is None or s is not self._prefill.slot]
         decoded = False
-        if active:
+        if active and self.drafter is not None:
+            decoded = True
+            active = self._decode_spec(active)
+        elif active:
             decoded = True
             with _span("sched.decode_batch", rows=len(active),
                        slots=len(self.slots)):
@@ -537,6 +622,68 @@ class ContinuousScheduler:
             padded_rows=padded_rows)
         self.metrics.finished_s = self.clock()
 
+    # ------------------------------------------------- speculative decode
+    def _decode_spec(self, active: list[Slot]) -> list[Slot]:
+        """One speculative decode round: a batched verify step over a
+        (slots, spec_width) window — per active row the committed next
+        token followed by spec_width - 1 drafted tokens — then per-row
+        greedy acceptance.  The emitted tokens are the *target* model's
+        own greedy continuations (greedy token j of the verify output is
+        bit-identical to what width-1 decoding would produce after
+        consuming window tokens 0..j); drafts only decide how many of
+        them commit this round, so every stream stays byte-identical to
+        width-1 decoding.  Rejected draft positions hold stale KV that
+        per-row valid-length masking hides until the write frontier
+        reclaims them — the same invariant that keeps recycled slot rows
+        and bucket padding invisible.  Returns the surviving rows."""
+        w = self.cfg.spec_width
+        k = w - 1
+        tokens = np.zeros((len(self.slots), w), np.int32)
+        drafts: dict[int, list[int]] = {}
+        for slot in active:
+            ctx = list(slot.req.tokens) + slot.tokens
+            d = [int(t) for t in self.drafter.propose(ctx, k)][:k]
+            while len(d) < k:                 # short proposals padded —
+                d.append(d[-1] if d else      # a wrong draft just stops
+                         int(self._cur[slot.idx]))    # acceptance early
+            drafts[slot.idx] = d
+            tokens[slot.idx, 0] = self._cur[slot.idx]
+            tokens[slot.idx, 1:] = d
+        with _span("sched.verify_batch", rows=len(active), width=w,
+                   slots=len(self.slots)):
+            greedy, finite, self.slot_cache = self.engine.verify_step(
+                self.slot_cache, tokens, self._pos)
+            greedy = np.asarray(greedy)
+            finite = np.array(finite)
+            hit = inject("kernel.nan_row")
+            if hit is not None:     # chaos: poison one active row — the
+                finite[active[hit.index % len(active)].idx] = False
+        now = self.clock()          # guard below must evict it
+        for slot in [s for s in active if not finite[s.idx]]:
+            self._evict_errored(slot, now)
+        active = [s for s in active if finite[s.idx]]
+        now = self.clock()
+        for slot in active:
+            idx = slot.idx
+            m = 0
+            while m < k and drafts[idx][m] == int(greedy[idx, m]):
+                m += 1
+            _REG.inc("sched.spec.rounds")
+            _REG.inc("sched.spec.drafted", k)
+            _REG.inc("sched.spec.accepted", m)
+            for tok in greedy[idx, :m + 1]:
+                self._pos[idx] += 1
+                self._cur[idx] = int(tok)
+                slot.next_token = int(tok)
+                self._emit(slot, int(tok), now)
+                if slot.free:
+                    break           # stop token / budget hit mid-window
+        _REG.inc("sched.decode_steps")
+        _REG.inc("sched.padded_decode_rows",
+                 len(self.slots) - len(active))
+        self._resolve_plans(f"verify{w}")
+        return active
+
     # ------------------------------------------------------ fault isolation
     def _guard_rows(self, last, active: list[Slot]) -> list[Slot]:
         """Evict active slots whose logits row went NaN/Inf — a poisoned
@@ -553,12 +700,13 @@ class ContinuousScheduler:
             self._evict_errored(slot, now)
         return [s for s in active if finite[s.idx]]
 
-    def _evict_errored(self, slot: Slot, now: float) -> None:
+    def _evict_errored(self, slot: Slot, now: float, *,
+                       counter: str = "errors.sched.nan_row") -> None:
         """Terminal ERRORED eviction of one in-flight slot: the tokens
         streamed so far are kept, the slot is freed, the rest of the
         batch keeps decoding."""
         req = slot.req
-        _REG.inc("errors.sched.nan_row")
+        _REG.inc(counter)
         _REG.inc("sched.errored")
         res = RequestResult(
             req_id=req.req_id, tokens=list(slot.tokens),
@@ -594,6 +742,11 @@ class ContinuousScheduler:
         self.slot_cache = self.engine.insert_row(
             self.slot_cache, pf.cache, slot.idx)
         self._prefill_cache = pf.cache   # next admission reuses it
+        if self.prefix_cache is not None:
+            # the completed prefill's rows are exact KV for this prompt:
+            # offer its full-chunk prefix to future shared-prefix
+            # admissions (the cache dedups / LRU-evicts internally)
+            self.prefix_cache.insert(req.tokens, pf.cache)
         self._pos[slot.idx] = req.prompt_len
         self._cur[slot.idx] = tok
         slot.next_token = tok
@@ -632,6 +785,33 @@ class ContinuousScheduler:
             if self.on_finish is not None:
                 self.on_finish(res)
             self.slots.release(slot)
+
+    # ----------------------------------------------------------- failover
+    def evacuate(self) -> list[Request]:
+        """Replica-failure drain (router failover): every *queued*
+        request — nothing user-visible happened for those — is handed
+        back for transparent re-routing, the in-flight prefill (no token
+        emitted either) likewise, and decode slots that already streamed
+        tokens are evicted as ERRORED with their streamed prefix kept
+        (still oracle-identical — truncation, never divergence).  The
+        scheduler is empty afterwards."""
+        requeue = list(self.queue)
+        self.queue.clear()
+        if self._prefill is not None:
+            pf, self._prefill = self._prefill, None
+            req = pf.slot.req
+            requeue.append(req)
+            tr = get_tracer()
+            rsp = self._req_spans.pop(req.req_id, None)
+            if tr is not None and rsp is not None:
+                tr.end(rsp, finish_reason="evacuated")
+            self.slots.release(pf.slot)
+        now = self.clock()
+        for slot in self.slots.busy():
+            self._evict_errored(slot, now,
+                                counter="errors.sched.replica_down")
+        _REG.inc("sched.evacuated", len(requeue))
+        return requeue
 
     # ------------------------------------------------------------ sampling
     def _step_key(self, req: Request, token_idx: int):

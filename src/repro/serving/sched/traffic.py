@@ -99,6 +99,28 @@ def poisson_trace(cfg: TrafficConfig) -> list[Request]:
     return reqs
 
 
+def shared_prefix_trace(cfg: TrafficConfig, *, prefix_len: int,
+                        n_prefixes: int = 1) -> list[Request]:
+    """A Poisson trace whose prompts each start with one of
+    ``n_prefixes`` common prefixes (system prompts / few-shot headers)
+    followed by a per-request tail drawn from ``cfg.prompt_mix`` — the
+    workload shape the KV prefix cache (serving.router.prefix) exists
+    for.  Arrivals, tails and budgets come from ``poisson_trace(cfg)``
+    unchanged; only the prompts grow by ``prefix_len``."""
+    base = poisson_trace(cfg)
+    rng = np.random.default_rng([cfg.seed, 7])
+    prefixes = [rng.integers(0, cfg.vocab, (prefix_len,)).astype(np.int32)
+                for _ in range(n_prefixes)]
+    out = []
+    for r in base:
+        pre = prefixes[int(rng.integers(n_prefixes))]
+        out.append(Request(
+            req_id=r.req_id, tokens=np.concatenate([pre, r.tokens]),
+            max_new_tokens=r.max_new_tokens, arrival_s=r.arrival_s,
+            stop_token=r.stop_token, deadline_s=r.deadline_s))
+    return out
+
+
 def replay(scheduler: ContinuousScheduler, requests: list[Request],
            clock: TraceClock) -> list[RequestResult]:
     """Drive the scheduler through a trace in virtual time.  The

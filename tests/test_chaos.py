@@ -536,3 +536,114 @@ def test_prewarm_partial_failure_degrades(serving, tmp_path,
     assert calls["n"] > 1                   # kept going past the failure
     assert sched.prewarmed_plans > 0
     assert get_registry().snapshot()["sched.prewarm_failures"] == 1
+
+
+# ------------------------------------------------------- router chaos
+
+def test_replica_down_failover_keeps_fidelity(serving):
+    """Killing a replica mid-trace: its queued / in-flight-prefill
+    requests fail over and finish oracle-identically on survivors; its
+    decode slots are evicted as ERRORED keeping their streamed prefix —
+    truncation, never divergence."""
+    from repro.serving.router import ReplicaRouter, RouterConfig
+    from repro.serving.sched import SchedConfig
+    cfg, _, _, engine, oracle = serving
+    reqs = _mk_requests(cfg, n=8, max_new=8)
+    for i, r in enumerate(reqs):
+        r.arrival_s = 0.0005 * i
+    set_injector(FaultInjector(
+        [FaultSpec("router.replica_down", at=(6,))], seed=0))
+    router = ReplicaRouter(
+        engine, RouterConfig(replicas=2, sched=SchedConfig(
+            slots=2, chunk_widths=(8, 32))))
+    results = router.route_trace(reqs)
+    set_injector(None)
+    assert sum(router.alive) == 1
+    assert len(results) == len(reqs)        # every request got a result
+    for r in results:
+        req = next(q for q in reqs if q.req_id == r.req_id)
+        want = _oracle_tokens(oracle, req)
+        if r.finish_reason == "errored":    # died mid-decode: prefix kept
+            assert r.tokens == want[:len(r.tokens)]
+        else:                               # failed over: full fidelity
+            assert r.tokens == want
+    snap = get_registry().snapshot()
+    assert snap["faults.injected.router.replica_down"] == 1
+    assert snap["router.replica_downs"] == 1
+    assert snap.get("sched.evacuated", 0) + \
+        snap.get("errors.sched.replica_down", 0) > 0
+
+
+def test_replica_down_last_replica_survives(serving):
+    """With one replica left the chaos site keeps firing but the router
+    refuses to kill the last replica — the trace still drains."""
+    from repro.serving.router import ReplicaRouter, RouterConfig
+    from repro.serving.sched import SchedConfig
+    cfg, _, _, engine, oracle = serving
+    reqs = _mk_requests(cfg, n=3, max_new=4, seed=3)
+    set_injector(FaultInjector(
+        [FaultSpec("router.replica_down", prob=1.0)], seed=0))
+    router = ReplicaRouter(
+        engine, RouterConfig(replicas=2, sched=SchedConfig(
+            slots=2, chunk_widths=(8, 32))))
+    results = router.route_trace(reqs)
+    set_injector(None)
+    assert sum(router.alive) == 1           # exactly one kill honored
+    served = [r for r in results if not r.shed]
+    for r in served:
+        req = next(q for q in reqs if q.req_id == r.req_id)
+        assert r.tokens == _oracle_tokens(oracle, req)
+    assert get_registry().snapshot()["router.replica_downs"] == 1
+
+
+def test_router_store_corruption_keeps_tokens_identical(serving,
+                                                        tmp_path):
+    """Store chaos under the router: replica-down + corrupt/IO-faulted
+    plan reads during a fleet trace — cold re-solves fill the gaps and
+    every *served* request stays token-identical to the oracle."""
+    from repro.core import tpu_mapping
+    from repro.serving import Engine, ServeConfig
+    from repro.serving.router import ReplicaRouter, RouterConfig
+    from repro.serving.sched import SchedConfig
+    cfg, model, params, _, oracle = serving
+    reqs = _mk_requests(cfg, n=6, max_new=6, seed=11)
+    for i, r in enumerate(reqs):
+        r.arrival_s = 0.0005 * i
+    root = tmp_path / "plans"
+    try:
+        engine0 = Engine(model, params,
+                         ServeConfig(max_new_tokens=10, cache_len=CACHE),
+                         plan_store=PlanStore(root))
+        from repro.serving.sched import ContinuousScheduler, SchedConfig
+        ContinuousScheduler(
+            engine0, SchedConfig(slots=2, chunk_widths=(8, 32)))
+        tpu_mapping.set_plan_store(None)
+        tpu_mapping.plan_gemm_tiling.cache_clear()
+        set_injector(FaultInjector(
+            [FaultSpec("store.read_io", prob=0.3, at=(0,)),
+             FaultSpec("store.corrupt", prob=0.2, at=(1,)),
+             FaultSpec("router.replica_down", at=(4,))], seed=7))
+        store = PlanStore(root)             # cold in-process cache
+        engine = Engine(model, params,
+                        ServeConfig(max_new_tokens=10, cache_len=CACHE),
+                        plan_store=store)
+        router = ReplicaRouter(
+            engine, RouterConfig(replicas=2, sched=SchedConfig(
+                slots=2, chunk_widths=(8, 32))))
+        results = router.route_trace(reqs)
+    finally:
+        set_injector(None)
+        tpu_mapping.set_plan_store(None)
+        tpu_mapping.plan_gemm_tiling.cache_clear()
+    assert len(results) == len(reqs)
+    for r in results:
+        req = next(q for q in reqs if q.req_id == r.req_id)
+        want = _oracle_tokens(oracle, req)
+        if r.finish_reason == "errored":
+            assert r.tokens == want[:len(r.tokens)]
+        else:
+            assert r.tokens == want
+    snap = get_registry().snapshot()
+    assert snap.get("faults.injected.store.read_io", 0) > 0
+    assert snap.get("faults.injected.store.corrupt", 0) > 0
+    assert snap.get("faults.injected.router.replica_down", 0) == 1
